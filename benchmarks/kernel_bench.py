@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: wall-clock of the jit'd XLA ops on this host plus
+interpret-mode validation of the Pallas kernels (TPU timing is out of scope
+on a CPU container; the TPU-side performance story lives in the §Roofline
+analysis of the dry-run, where BlockSpec tiling determines the claimed VMEM
+footprint)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+Row = Tuple[str, float, str]
+
+
+def _time(f, *args, iters=20) -> float:
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_table() -> Tuple[List[Row], str]:
+    rng = np.random.default_rng(0)
+    rows: List[Row] = []
+    checks = []
+
+    x = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
+    rows.append(("kernel/axpy-64k/xla", _time(lambda: ops.axpy(x, y, 2.5, impl="xla")), "us"))
+    checks.append(np.allclose(np.asarray(ops.axpy(x, y, 2.5, impl="pallas")),
+                              np.asarray(ref.axpy(x, y, 2.5)), rtol=1e-5, atol=1e-5))
+
+    a = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    rows.append(("kernel/matmul-512/xla", _time(lambda: ops.matmul(a, b, impl="xla")), "us"))
+    checks.append(np.allclose(np.asarray(ops.matmul(a, b, impl="pallas")),
+                              np.asarray(ref.matmul(a, b)), rtol=1e-3, atol=1e-2))
+
+    amat = jnp.asarray(rng.standard_normal((1024, 512)), jnp.float32)
+    xv = jnp.asarray(rng.standard_normal(512), jnp.float32)
+    rows.append(("kernel/atax-1024x512/xla", _time(lambda: ops.atax(amat, xv, impl="xla")), "us"))
+    checks.append(np.allclose(np.asarray(ops.atax(amat, xv, impl="pallas")),
+                              np.asarray(ref.atax(amat, xv)), rtol=2e-3, atol=2e-3))
+
+    d = jnp.asarray(rng.standard_normal((128, 512)), jnp.float32)
+    rows.append(("kernel/covariance-128x512/xla", _time(lambda: ops.covariance(d, impl="xla")), "us"))
+    checks.append(np.allclose(np.asarray(ops.covariance(d, impl="pallas")),
+                              np.asarray(ref.covariance(d)), rtol=1e-4, atol=1e-4))
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 512, 64)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 4, 512, 64)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 4, 512, 64)), jnp.float32)
+    rows.append(("kernel/flash-512/xla-ref",
+                 _time(lambda: ops.attention(q, k, v, impl="xla")), "us"))
+    checks.append(np.allclose(np.asarray(ops.attention(q, k, v, impl="pallas")),
+                              np.asarray(ref.attention(q, k, v)), rtol=2e-3, atol=2e-3))
+
+    from repro.kernels.ssm_scan import ssm_scan
+    a_ = jnp.asarray(rng.uniform(0.8, 0.999, (1, 256, 256, 16)), jnp.float32)
+    b_ = jnp.asarray(rng.standard_normal((1, 256, 256, 16)) * 0.1, jnp.float32)
+    c_ = jnp.asarray(rng.standard_normal((1, 256, 16)), jnp.float32)
+    rows.append(("kernel/ssm-scan-256/xla-ref",
+                 _time(lambda: ref.ssm_scan(a_, b_, c_)), "us"))
+    checks.append(np.allclose(np.asarray(ssm_scan(a_, b_, c_, interpret=True)),
+                              np.asarray(ref.ssm_scan(a_, b_, c_)),
+                              rtol=2e-4, atol=2e-4))
+
+    derived = f"pallas-interpret allclose: {sum(checks)}/{len(checks)}"
+    return rows, derived

@@ -1,0 +1,65 @@
+"""Real-runtime benchmark: baseline vs multicast offload dispatch on an
+8-device CPU mesh (subprocess, so the bench process keeps 1 device), plus
+the HLO collective structure — the measurable, hardware-independent
+signature of the paper's co-design."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+_CHILD = """
+import json, time
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime, OffloadConfig, count_collectives
+
+job = jobs.make_axpy(4096)
+operands, _ = job.make_instance(0)
+out = {}
+for label, cfg in (("multicast", OffloadConfig.extended()),
+                   ("baseline", OffloadConfig.baseline())):
+    rt = OffloadRuntime(config=cfg)
+    rt.offload(job, operands, n=8).wait()          # compile + warm
+    t0 = time.perf_counter()
+    iters = 30
+    for _ in range(iters):
+        rt.offload(job, operands, n=8).wait()
+    us = (time.perf_counter() - t0) / iters * 1e6
+    colls = count_collectives(rt.lowered_text(job, 8))
+    out[label] = {"us": us, "collectives": colls}
+print(json.dumps(out))
+"""
+
+
+def offload_wallclock() -> Tuple[List[Row], str]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_ENABLE_X64"] = "true"
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(_CHILD)],
+                          capture_output=True, text=True, env=env, timeout=600)
+    if proc.returncode != 0:
+        return [("offload/error", 0.0, proc.stderr[-200:])], "subprocess failed"
+    data = json.loads(proc.stdout.strip().splitlines()[-1])
+    rows = [
+        ("offload/axpy4096/multicast/8dev", data["multicast"]["us"], "us"),
+        ("offload/axpy4096/baseline/8dev", data["baseline"]["us"], "us"),
+    ]
+    mc_c = data["multicast"]["collectives"]
+    bl_c = data["baseline"]["collectives"]
+    rows.append(("offload/multicast/chain_depth",
+                 mc_c["collective-permute"], "collective-permutes"))
+    rows.append(("offload/baseline/chain_depth",
+                 bl_c["collective-permute"], "collective-permutes"))
+    derived = (f"baseline chain = {bl_c['collective-permute']} ppermutes "
+               f"(= 2(n-1)); multicast = {mc_c['all-reduce']} all-reduce; "
+               f"wallclock ratio {data['baseline']['us']/data['multicast']['us']:.2f}x")
+    return rows, derived

@@ -1,0 +1,49 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig07,fig12,...]
+
+Prints ``name,us_per_call,derived`` CSV.  Simulator-backed figures report
+modeled cycles (1 cycle = 1 ns at the paper's 1 GHz testbench); `derived`
+carries each figure's headline statistic next to the paper's published
+value.
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig07,fig12")
+    args = ap.parse_args()
+
+    from benchmarks.kernel_bench import kernel_table
+    from benchmarks.offload_wallclock import offload_wallclock
+    from benchmarks.paper_figs import ALL_FIGS
+
+    suites = dict(ALL_FIGS)
+    suites["kernels"] = kernel_table
+    suites["offload"] = offload_wallclock
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, fn in suites.items():
+        try:
+            rows, derived = fn()
+        except Exception as e:                              # noqa: BLE001
+            print(f"{key}/ERROR,0,{e!r}")
+            failures += 1
+            continue
+        for name, val, unit in rows:
+            print(f"{name},{val:.3f},{unit}")
+        print(f"{key}/SUMMARY,0,{derived}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Analytical-model walkthrough: reproduce the paper's eqs. 5/6 and fig. 12
+validation, then use the model the way the paper intends — to make offload
+decisions.
+
+    PYTHONPATH=src python examples/offload_model_validation.py
+"""
+
+from repro.core import jobs, model, simulator
+
+
+def main() -> None:
+    print("=== eq. 5 (paper, verbatim) vs our structural model ===")
+    print(f"{'N':>6} {'n':>3} {'eq.5':>10} {'structural':>10} {'simulated':>10}")
+    for N in (256, 1024, 4096):
+        for n in (1, 8, 32):
+            eq5 = model.axpy_closed_form(n, N)
+            ours = model.predict_total(jobs.axpy_spec(N), n)
+            sim = simulator.simulate(jobs.axpy_spec(N), n, "multicast").total
+            print(f"{N:6d} {n:3d} {eq5:10.1f} {ours:10.1f} {sim:10.1f}")
+
+    print("\n=== fig. 12: model error across kernels (paper: <15 %) ===")
+    cases = {
+        "axpy": (jobs.axpy_spec, [(64,), (256,), (1024,)]),
+        "atax": (jobs.atax_spec, [(32, 32), (128, 128)]),
+        "matmul": (lambda s: jobs.matmul_spec(s, s, s), [(16,), (64,)]),
+        "covariance": (lambda s: jobs.covariance_spec(s, 2 * s), [(32,)]),
+        "montecarlo": (jobs.montecarlo_spec, [(16384,)]),
+        "bfs": (jobs.bfs_spec, [(256,)]),
+    }
+    for name, (mk, sizes) in cases.items():
+        v1 = model.max_rel_error(model.validate(mk, sizes, (1, 2, 4, 8, 16, 32)))
+        v2 = model.max_rel_error(model.validate(
+            mk, sizes, (1, 2, 4, 8, 16, 32), predictor=model.predict_total_v2))
+        print(f"  {name:12s} eq.4 model: {v1*100:5.2f}%   "
+              f"+port-bound (ours): {v2*100:5.2f}%")
+
+    print("\n=== the offload decision (paper §1: 'if' and 'how') ===")
+    for name, mk in (("axpy-256", lambda: jobs.axpy_spec(256)),
+                     ("axpy-65536", lambda: jobs.axpy_spec(65536)),
+                     ("atax-64", lambda: jobs.atax_spec(64, 64))):
+        n, t = model.optimal_clusters(mk)
+        host = 3.0 * model.predict_total(mk(), 1)   # pretend host is 3x slower
+        go, n2, t2 = model.should_offload(mk(), host)
+        print(f"  {name:12s}: offload to n={n:2d} (predicted {t:8.0f} cyc); "
+              f"vs host {host:8.0f} cyc -> offload={go}")
+
+
+if __name__ == "__main__":
+    main()

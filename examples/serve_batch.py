@@ -1,0 +1,55 @@
+"""Batched serving example: prefill + decode with KV/SSM caches for three
+different architecture families (dense GQA, MLA, hybrid SSM), driven by the
+ServeEngine with completion-unit tracking per step.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro import models as M
+from repro.data import DataConfig, SyntheticStream
+from repro.dist.sharding import param_specs, to_shardings
+from repro.serve import ServeConfig, ServeEngine
+
+
+def demo(arch: str, batch: int = 4, prompt: int = 16, new: int = 24) -> None:
+    cfg = M.reduced(M.get(arch))
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs).reshape(4, 2), ("data", "model"))
+    params = M.init_params(jax.random.key(0), cfg)
+    pspecs = param_specs(params, mesh)
+    params = jax.device_put(params, to_shardings(pspecs, mesh))
+
+    engine = ServeEngine(cfg, params, mesh,
+                         ServeConfig(batch=batch, max_len=prompt + new + 1,
+                                     temperature=0.8, seed=7))
+    stream = SyntheticStream(
+        DataConfig(vocab_size=cfg.vocab_size, batch_size=batch,
+                   seq_len=prompt, seed=1), cfg)
+    ex = stream.batch(0)
+    extra = {k: v for k, v in ex.items() if k == "patches"}
+    t0 = time.time()
+    out = engine.generate(ex["tokens"], new, extra or None)
+    dt = time.time() - t0
+    cache_kind = ("compressed-KV (MLA)" if cfg.mla
+                  else "SSM state" if cfg.ssm else "KV")
+    print(f"{arch:24s} [{cfg.family:6s}] cache={cache_kind:20s} "
+          f"{batch * new} tokens in {dt:5.1f}s ({batch * new / dt:6.1f} tok/s)")
+    print(f"  sample: {out[0][:12].tolist()}")
+
+
+def main() -> None:
+    for arch in ("smollm-360m", "deepseek-v2-lite-16b", "zamba2-2.7b"):
+        demo(arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""repro — a JAX/TPU reproduction of "Taming Offload Overheads in a Massively
+Parallel Open-Source RISC-V MPSoC" (Colagrande & Benini, TPDS 2025), extended
+into a production-grade multi-pod training/serving framework.
+
+Layers (bottom-up):
+  repro.kernels    — Pallas TPU kernels for the paper's compute hot spots
+  repro.core       — the paper's contribution: multicast offload runtime,
+                     job completion unit, phase simulator, analytical model
+  repro.models     — architecture zoo (10 assigned archs + paper benchmarks)
+  repro.dist       — mesh / sharding rules / collective helpers / compression
+  repro.data       — deterministic synthetic data pipeline
+  repro.optim      — AdamW + schedules (pure JAX)
+  repro.train      — train-step builder (microbatching, remat, offload dispatch)
+  repro.serve      — prefill/decode with KV cache and SSM state
+  repro.checkpoint — sharded npz+manifest checkpoints, elastic restore
+  repro.ft         — straggler mitigation, watchdog, elastic rescale
+  repro.configs    — assigned architecture configs
+  repro.launch     — mesh builders, dry-run, train/serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,7 @@
+"""One config module per assigned architecture (``--arch <id>``).
+
+All ten re-export from :mod:`repro.models.registry`; import any of them or
+use ``repro.models.get(name)`` directly.
+"""
+
+from repro.models.registry import ARCHS, get  # noqa: F401

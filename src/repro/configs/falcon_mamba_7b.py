@@ -1,0 +1,15 @@
+"""ssm 64L d4096 attn-free mamba1 sstate16 v65024 [arXiv:2410.05355]
+
+Selectable via ``--arch falcon-mamba-7b`` in repro.launch.{dryrun,train,serve}.
+The exact configuration lives in :mod:`repro.models.registry` (single source
+of truth); this module re-exports it plus the cell shape table and the
+reduced smoke-test sibling.
+"""
+
+from repro.launch.cells import SHAPES  # noqa: F401  (the 4 input shapes)
+from repro.models.config import reduced
+from repro.models.registry import get
+
+NAME = "falcon-mamba-7b"
+CONFIG = get(NAME)
+REDUCED = reduced(CONFIG)

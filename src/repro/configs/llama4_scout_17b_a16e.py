@@ -1,0 +1,15 @@
+"""moe 48L d5120 40H/kv8 ff8192 v202048 16e top-1 + shared [hf:meta-llama/Llama-4-Scout-17B-16E]
+
+Selectable via ``--arch llama4-scout-17b-a16e`` in repro.launch.{dryrun,train,serve}.
+The exact configuration lives in :mod:`repro.models.registry` (single source
+of truth); this module re-exports it plus the cell shape table and the
+reduced smoke-test sibling.
+"""
+
+from repro.launch.cells import SHAPES  # noqa: F401  (the 4 input shapes)
+from repro.models.config import reduced
+from repro.models.registry import get
+
+NAME = "llama4-scout-17b-a16e"
+CONFIG = get(NAME)
+REDUCED = reduced(CONFIG)

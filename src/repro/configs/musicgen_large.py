@@ -1,0 +1,15 @@
+"""audio 48L d2048 32H ff8192 v2048 decoder-only over EnCodec tokens, sinusoidal pos [arXiv:2306.05284]
+
+Selectable via ``--arch musicgen-large`` in repro.launch.{dryrun,train,serve}.
+The exact configuration lives in :mod:`repro.models.registry` (single source
+of truth); this module re-exports it plus the cell shape table and the
+reduced smoke-test sibling.
+"""
+
+from repro.launch.cells import SHAPES  # noqa: F401  (the 4 input shapes)
+from repro.models.config import reduced
+from repro.models.registry import get
+
+NAME = "musicgen-large"
+CONFIG = get(NAME)
+REDUCED = reduced(CONFIG)

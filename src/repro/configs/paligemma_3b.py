@@ -1,0 +1,15 @@
+"""vlm 18L d2048 8H/kv1 hd256 ff16384 v257216 SigLIP-stub + gemma prefix-LM [arXiv:2407.07726]
+
+Selectable via ``--arch paligemma-3b`` in repro.launch.{dryrun,train,serve}.
+The exact configuration lives in :mod:`repro.models.registry` (single source
+of truth); this module re-exports it plus the cell shape table and the
+reduced smoke-test sibling.
+"""
+
+from repro.launch.cells import SHAPES  # noqa: F401  (the 4 input shapes)
+from repro.models.config import reduced
+from repro.models.registry import get
+
+NAME = "paligemma-3b"
+CONFIG = get(NAME)
+REDUCED = reduced(CONFIG)

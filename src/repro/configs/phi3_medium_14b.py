@@ -1,0 +1,15 @@
+"""dense 40L d5120 40H/kv10 ff17920 v100352 RoPE SwiGLU GQA [arXiv:2404.14219]
+
+Selectable via ``--arch phi3-medium-14b`` in repro.launch.{dryrun,train,serve}.
+The exact configuration lives in :mod:`repro.models.registry` (single source
+of truth); this module re-exports it plus the cell shape table and the
+reduced smoke-test sibling.
+"""
+
+from repro.launch.cells import SHAPES  # noqa: F401  (the 4 input shapes)
+from repro.models.config import reduced
+from repro.models.registry import get
+
+NAME = "phi3-medium-14b"
+CONFIG = get(NAME)
+REDUCED = reduced(CONFIG)

@@ -1,0 +1,15 @@
+"""dense 80L d8192 64H/kv8 ff49152 v152064 QKV-bias [hf:Qwen/Qwen1.5-110B]
+
+Selectable via ``--arch qwen1.5-110b`` in repro.launch.{dryrun,train,serve}.
+The exact configuration lives in :mod:`repro.models.registry` (single source
+of truth); this module re-exports it plus the cell shape table and the
+reduced smoke-test sibling.
+"""
+
+from repro.launch.cells import SHAPES  # noqa: F401  (the 4 input shapes)
+from repro.models.config import reduced
+from repro.models.registry import get
+
+NAME = "qwen1.5-110b"
+CONFIG = get(NAME)
+REDUCED = reduced(CONFIG)

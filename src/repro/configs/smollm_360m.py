@@ -1,0 +1,15 @@
+"""dense 32L d960 15H/kv5 ff2560 v49152 llama-arch small [hf:HuggingFaceTB/SmolLM-360M]
+
+Selectable via ``--arch smollm-360m`` in repro.launch.{dryrun,train,serve}.
+The exact configuration lives in :mod:`repro.models.registry` (single source
+of truth); this module re-exports it plus the cell shape table and the
+reduced smoke-test sibling.
+"""
+
+from repro.launch.cells import SHAPES  # noqa: F401  (the 4 input shapes)
+from repro.models.config import reduced
+from repro.models.registry import get
+
+NAME = "smollm-360m"
+CONFIG = get(NAME)
+REDUCED = reduced(CONFIG)

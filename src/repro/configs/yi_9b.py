@@ -1,0 +1,15 @@
+"""dense 48L d4096 32H/kv4 ff11008 v64000 llama-arch GQA [arXiv:2403.04652]
+
+Selectable via ``--arch yi-9b`` in repro.launch.{dryrun,train,serve}.
+The exact configuration lives in :mod:`repro.models.registry` (single source
+of truth); this module re-exports it plus the cell shape table and the
+reduced smoke-test sibling.
+"""
+
+from repro.launch.cells import SHAPES  # noqa: F401  (the 4 input shapes)
+from repro.models.config import reduced
+from repro.models.registry import get
+
+NAME = "yi-9b"
+CONFIG = get(NAME)
+REDUCED = reduced(CONFIG)

@@ -1,0 +1,15 @@
+"""hybrid 54L d2560 mamba2 sstate64 + shared 32H attn block every 6 [arXiv:2411.15242]
+
+Selectable via ``--arch zamba2-2.7b`` in repro.launch.{dryrun,train,serve}.
+The exact configuration lives in :mod:`repro.models.registry` (single source
+of truth); this module re-exports it plus the cell shape table and the
+reduced smoke-test sibling.
+"""
+
+from repro.launch.cells import SHAPES  # noqa: F401  (the 4 input shapes)
+from repro.models.config import reduced
+from repro.models.registry import get
+
+NAME = "zamba2-2.7b"
+CONFIG = get(NAME)
+REDUCED = reduced(CONFIG)

@@ -1,0 +1,43 @@
+"""The paper's contribution: multicast offload runtime, job completion unit,
+cycle-accurate phase simulator, and the analytical offload-runtime model."""
+
+from repro.core.completion import CompletionUnit
+from repro.core.jobs import PAPER_JOBS, PaperJob
+from repro.core.model import (
+    axpy_closed_form,
+    atax_closed_form_paper,
+    optimal_clusters,
+    predict,
+    predict_total,
+    predict_total_v2,
+    should_offload,
+    validate,
+)
+from repro.core.multicast import (
+    AddressMap,
+    MulticastRequest,
+    decode_cluster_selection,
+    decode_match,
+    encode_cluster_selection,
+    encode_cluster_selection_multi,
+)
+from repro.core.offload import (
+    JobHandle,
+    OffloadConfig,
+    OffloadRuntime,
+    count_collectives,
+)
+from repro.core.params import DEFAULT_PARAMS, OccamyParams
+from repro.core.phases import Phase, PhaseStats
+from repro.core.simulator import JobSpec, SimResult, offload_overhead, simulate, speedups
+
+__all__ = [
+    "AddressMap", "CompletionUnit", "DEFAULT_PARAMS", "JobHandle", "JobSpec",
+    "MulticastRequest", "OccamyParams", "OffloadConfig", "OffloadRuntime",
+    "PAPER_JOBS", "PaperJob", "Phase", "PhaseStats", "SimResult",
+    "atax_closed_form_paper", "axpy_closed_form", "count_collectives",
+    "decode_cluster_selection", "decode_match", "encode_cluster_selection",
+    "encode_cluster_selection_multi", "offload_overhead", "optimal_clusters",
+    "predict", "predict_total", "predict_total_v2", "should_offload",
+    "simulate", "speedups", "validate",
+]

@@ -1,0 +1,133 @@
+"""Job completion unit — paper §4.3, figure 6.
+
+Host-side mirror of the unit's register semantics, plus the two device-side
+completion-synchronization collectives used by the offload runtime:
+
+* ``central_counter`` (baseline): every cluster's "arrival" hops to cluster 0
+  through a chain of ``collective-permute``s — an O(n)-depth dependency chain,
+  the TPU-mesh analogue of the software central-counter barrier whose latency
+  grows with the number of clusters (§5.5 H).
+* ``unit`` (the paper's extension): one fused ``psum`` of the per-cluster
+  arrival flags — a single all-reduce (O(log n) tree on the ICI), the
+  analogue of the CLINT job completion unit: clusters post arrivals, the
+  "unit" (the reduction) fires once arrivals == offload register.
+
+The host-side :class:`CompletionUnit` reproduces fig. 6 exactly: an offload
+register programmed with the expected arrival count, an arrivals counter that
+auto-increments, an interrupt that fires when they match (deferred if one is
+already pending), auto-reset, and multiple instances addressable by job ID
+for outstanding-job tracking (§4.3: "multiple copies of this logic can be
+instantiated to support multiple outstanding jobs").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Device-side completion collectives (used inside shard_map).
+# ---------------------------------------------------------------------------
+
+
+def completion_unit_arrivals(done: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """The extension: one all-reduce == the completion unit's arrivals count."""
+    return jax.lax.psum(done, axis)
+
+
+def central_counter_arrivals(done: jnp.ndarray, axis: str, n: int) -> jnp.ndarray:
+    """The baseline: serialize arrivals into cluster 0 hop by hop.
+
+    Builds an O(n) chain of ``collective-permute`` ops: cluster i's flag
+    reaches cluster 0 after i hops, and cluster 0 accumulates one increment
+    per hop — mirroring the AMO-serialized software barrier.  The returned
+    count is meaningful on cluster 0 (other clusters return their partial
+    view, as in the real system where only cluster 0 reads the counter).
+    """
+    if n == 1:
+        return done
+    idx = jax.lax.axis_index(axis)
+    count = done
+    hopping = done
+    perm = [(i, i - 1) for i in range(1, n)]
+    for _ in range(n - 1):
+        hopping = jax.lax.ppermute(hopping, axis, perm)
+        count = count + jnp.where(idx == 0, hopping, jnp.zeros_like(hopping))
+    return count
+
+
+# ---------------------------------------------------------------------------
+# Host-side register-level model of the unit (fig. 6).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _UnitRegs:
+    offload: int = 0      # expected arrivals, programmed by the host
+    arrivals: int = 0     # auto-incrementing arrivals counter
+
+
+class CompletionUnit:
+    """Fig. 6 logic: offload/arrivals registers + IPI fire + auto-reset.
+
+    ``n_units`` > 1 instantiates multiple copies addressed by job ID
+    (supporting multiple outstanding jobs / task overlapping, §4.3).
+    """
+
+    def __init__(self, n_units: int = 1):
+        self._regs: List[_UnitRegs] = [_UnitRegs() for _ in range(n_units)]
+        self._pending_irq: Optional[int] = None   # job id carried as cause
+        self._deferred: List[int] = []            # fired while another pending
+
+    @property
+    def n_units(self) -> int:
+        return len(self._regs)
+
+    def program(self, n_clusters: int, job_id: int = 0) -> None:
+        """Host programs the offload register at job dispatch."""
+        regs = self._regs[job_id % len(self._regs)]
+        if regs.offload != 0:
+            raise RuntimeError(f"unit {job_id} already tracking an offload")
+        if n_clusters <= 0:
+            raise ValueError("n_clusters must be positive")
+        regs.offload = n_clusters
+        regs.arrivals = 0
+
+    def arrive(self, job_id: int = 0, count: int = 1) -> None:
+        """A cluster writes the arrivals register (atomic increment)."""
+        regs = self._regs[job_id % len(self._regs)]
+        if regs.offload == 0:
+            raise RuntimeError(f"arrival for unprogrammed unit {job_id}")
+        regs.arrivals += count
+        if regs.arrivals == regs.offload:
+            # Job complete: fire (or defer) the IPI, auto-reset the counter.
+            if self._pending_irq is None:
+                self._pending_irq = job_id
+            else:
+                self._deferred.append(job_id)
+            regs.offload = 0
+            regs.arrivals = 0
+
+    def pending_cause(self) -> Optional[int]:
+        """The job ID carried as the interrupt cause (None = no pending IPI)."""
+        return self._pending_irq
+
+    def clear(self) -> Optional[int]:
+        """Host clears the IPI; a deferred completion fires immediately after
+        (fig. 6: "otherwise this will occur as soon as the previous pending
+        interrupt is cleared")."""
+        cause = self._pending_irq
+        self._pending_irq = self._deferred.pop(0) if self._deferred else None
+        return cause
+
+    def outstanding(self) -> Dict[int, int]:
+        """job-id -> arrivals still missing, for every in-flight unit."""
+        return {
+            jid: r.offload - r.arrivals
+            for jid, r in enumerate(self._regs)
+            if r.offload > 0
+        }

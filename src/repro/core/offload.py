@@ -1,0 +1,305 @@
+"""The offload runtime — the paper's host-centric execution model on a JAX
+device mesh.
+
+``OffloadRuntime`` is the dispatch layer of this framework: it carries a job
+(the paper's six kernels, or a training/serving step) onto a set of
+accelerator "clusters" (devices of a 1-D mesh), reproducing the paper's two
+implementations:
+
+* ``baseline``  — job information is materialized on cluster 0 only and
+  distributed hop-by-hop through a chain of ``collective-permute``s (the
+  sequential P2P writes of §4.1, phases C/D), and completion is synchronized
+  through the central-counter chain (§5.5 H).  The lowered HLO contains an
+  O(n)-deep chain of collectives — the paper's O(n) offload critical path,
+  structurally visible in ``compiled.as_text()``.
+* ``multicast`` — job information is replicated (a single logical broadcast,
+  XLA lowers it to an O(log n) tree), phases C/D vanish, and completion is a
+  single fused ``psum`` (the job completion unit).  This is the paper's
+  co-designed fast path and the default for every training/serving step in
+  this framework.
+
+Cluster selection uses the paper's address-mask multicast encoding (§4.2):
+``select=MulticastRequest(...)`` picks any power-of-two subcube of clusters,
+exactly like fig. 5; arbitrary sets fall back to a minimal multi-request
+cover.  The selected clusters become a sub-mesh.
+
+Completion is tracked host-side by the :class:`~repro.core.completion.
+CompletionUnit` (fig. 6 semantics, multiple outstanding jobs by job ID), fed
+by the device-side arrivals count that every offloaded program returns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import multicast as mc
+from repro.core.completion import (
+    CompletionUnit,
+    central_counter_arrivals,
+    completion_unit_arrivals,
+)
+from repro.core.jobs import PaperJob
+
+AXIS = "clusters"
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    """First-class framework feature: how jobs are dispatched (§4.2/§4.3)."""
+
+    info_dist: str = "multicast"       # "multicast" | "p2p_chain"
+    completion: str = "unit"           # "unit" | "central_counter"
+    donate_operands: bool = False
+
+    @staticmethod
+    def baseline() -> "OffloadConfig":
+        return OffloadConfig(info_dist="p2p_chain", completion="central_counter")
+
+    @staticmethod
+    def extended() -> "OffloadConfig":
+        return OffloadConfig(info_dist="multicast", completion="unit")
+
+
+@dataclasses.dataclass
+class JobHandle:
+    """An in-flight offloaded job (async dispatch = multiple outstanding)."""
+
+    job_id: int
+    result: Any                      # jax arrays (async until blocked on)
+    arrivals: Any                    # device-side arrivals count
+    n_clusters: int
+    dispatched_at: float
+    runtime: "OffloadRuntime"
+
+    def wait(self) -> Any:
+        """Block until complete; feeds the completion unit and returns data."""
+        arrivals = int(jax.device_get(self.arrivals))
+        self.runtime.unit.arrive(self.job_id, arrivals)
+        cause = self.runtime.unit.clear()
+        if cause != self.job_id:
+            raise RuntimeError(
+                f"completion-unit cause {cause} != job {self.job_id}"
+            )
+        return jax.device_get(self.result)
+
+
+def _chain_distribute(args: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Baseline phases C/D: args hop cluster-0 -> 1 -> ... -> n-1.
+
+    Builds n-1 dependent collective-permutes (the O(n) critical path).
+    """
+    if n == 1:
+        return args
+    idx = jax.lax.axis_index(AXIS)
+    have = args
+    perm = [(i, i + 1) for i in range(n - 1)]
+    for k in range(n - 1):
+        received = jax.lax.ppermute(have, AXIS, perm)
+        have = jnp.where(idx <= k, have, received)
+    return have
+
+
+class OffloadRuntime:
+    """Host-centric offload of jobs onto a 1-D cluster mesh."""
+
+    def __init__(
+        self,
+        devices: Optional[Sequence[jax.Device]] = None,
+        config: OffloadConfig = OffloadConfig.extended(),
+        n_units: int = 4,
+    ):
+        self.all_devices = list(devices if devices is not None else jax.devices())
+        self.config = config
+        self.unit = CompletionUnit(n_units=n_units)
+        self._job_counter = 0
+        self._compiled: Dict[Tuple, Any] = {}
+
+    # -- cluster selection (paper §4.2 semantics) ---------------------------------
+
+    def select_clusters(
+        self,
+        n: Optional[int] = None,
+        request: Optional[mc.MulticastRequest] = None,
+        clusters: Optional[Sequence[int]] = None,
+    ) -> Tuple[Sequence[jax.Device], Sequence[int]]:
+        """Resolve a cluster selection to a device subset.
+
+        Exactly one of ``n`` (first n clusters), ``request`` (an address-mask
+        multicast request, fig. 5) or ``clusters`` (an explicit set, greedily
+        covered by subcube requests) must be given.
+        """
+        if sum(x is not None for x in (n, request, clusters)) != 1:
+            raise ValueError("give exactly one of n / request / clusters")
+        if request is not None:
+            ids = mc.decode_cluster_selection(request, len(self.all_devices))
+        elif clusters is not None:
+            reqs = mc.encode_cluster_selection_multi(clusters, len(self.all_devices))
+            ids = sorted(
+                {c for r in reqs for c in mc.decode_cluster_selection(r, len(self.all_devices))}
+            )
+            assert set(ids) == set(clusters)
+        else:
+            if not (1 <= n <= len(self.all_devices)):
+                raise ValueError(f"n={n} outside [1, {len(self.all_devices)}]")
+            ids = list(range(n))
+        return [self.all_devices[i] for i in ids], ids
+
+    # -- dispatch -------------------------------------------------------------------
+
+    def offload(
+        self,
+        job: PaperJob,
+        operands: Dict[str, np.ndarray],
+        job_args: Optional[np.ndarray] = None,
+        n: Optional[int] = None,
+        request: Optional[mc.MulticastRequest] = None,
+        clusters: Optional[Sequence[int]] = None,
+    ) -> JobHandle:
+        """Phase A..I, as one jitted program on the selected sub-mesh."""
+        devices, ids = self.select_clusters(
+            n=n if (request is None and clusters is None) else None,
+            request=request,
+            clusters=clusters,
+        )
+        n_sel = len(devices)
+        mesh = Mesh(np.asarray(devices), (AXIS,))
+        job_id = self._job_counter
+        self._job_counter += 1
+
+        if job_args is None:
+            job_args = np.ones((8,), dtype=np.float64)
+        job_args = np.asarray(job_args, dtype=np.float64)
+
+        fn = self._build(job, mesh, n_sel, tuple(sorted(operands)), job_args.shape)
+
+        # Phase A / job-info placement: multicast replicates (one broadcast);
+        # baseline materializes on cluster 0 only and the program chains it.
+        if self.config.info_dist == "multicast":
+            args_sharding = NamedSharding(mesh, P())
+            args_dev = jax.device_put(job_args, args_sharding)
+        else:
+            tiled = np.zeros((n_sel,) + job_args.shape, job_args.dtype)
+            tiled[0] = job_args
+            args_dev = jax.device_put(tiled, NamedSharding(mesh, P(AXIS)))
+
+        # Phase E staging: operands enter via their job sharding (chunked or
+        # replicated), the wide-path data movement the paper does NOT multicast.
+        op_dev = {}
+        for name in sorted(operands):
+            axis = job.shard_axes[name]
+            spec = P() if axis is None else P(*([None] * axis + [AXIS]))
+            arr = np.asarray(operands[name])
+            if axis is not None and arr.shape[axis] % n_sel:
+                raise ValueError(
+                    f"operand {name} axis {axis} ({arr.shape[axis]}) "
+                    f"not divisible by {n_sel} clusters"
+                )
+            op_dev[name] = jax.device_put(arr, NamedSharding(mesh, spec))
+
+        self.unit.program(n_sel, job_id)
+        result, arrivals = fn(args_dev, *(op_dev[k] for k in sorted(op_dev)))
+        return JobHandle(job_id, result, arrivals, n_sel, time.monotonic(), self)
+
+    def run(self, job: PaperJob, seed: int = 0, **sel) -> Tuple[Any, Any]:
+        """Convenience: build an instance, offload it, return (got, expected)."""
+        operands, expected = job.make_instance(seed)
+        handle = self.offload(job, operands, **sel)
+        return handle.wait(), expected
+
+    # -- program construction ---------------------------------------------------------
+
+    def _build(self, job, mesh, n, op_names, args_shape):
+        key = (job.spec.name, self.config, n, op_names, args_shape,
+               tuple(d.id for d in mesh.devices.flat))
+        if key in self._compiled:
+            return self._compiled[key]
+
+        cfg = self.config
+        shard_axes = job.shard_axes
+        out_axis = job.out_axis
+        reduce = job.reduce
+        compute = job.compute
+
+        in_specs = [P(AXIS) if cfg.info_dist == "p2p_chain" else P()]
+        for name in op_names:
+            ax = shard_axes[name]
+            in_specs.append(P() if ax is None else P(*([None] * ax + [AXIS])))
+        out_specs = (
+            P() if out_axis is None else P(*([None] * out_axis + [AXIS])),
+            P(),
+        )
+
+        def program(args, *ops):
+            # Phases B/C/D: job-information distribution.
+            if cfg.info_dist == "p2p_chain":
+                local_args = _chain_distribute(args[0], n)
+            else:
+                local_args = args
+            # The job-info scale rides through the computation so the
+            # distribution chain is live in the HLO (and so a wrong
+            # distribution corrupts the result -> tested).
+            scale = local_args[0]
+
+            # Phase F: the kernel, on this cluster's shard.
+            out = compute(*ops)
+            out = out * scale.astype(out.dtype)
+            if out_axis is None and reduce == "sum":
+                out = jax.lax.psum(out, AXIS)
+            elif out_axis is None and reduce == "mean":
+                out = jax.lax.pmean(out, AXIS)
+
+            # Phase H: completion notification.
+            done = jnp.float32(1.0)
+            if cfg.completion == "unit":
+                arrivals = completion_unit_arrivals(done, AXIS)
+            else:
+                arrivals = central_counter_arrivals(done, AXIS, n)
+            return out, arrivals
+
+        fn = jax.jit(
+            jax.shard_map(
+                program, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs,
+                check_vma=False,
+            )
+        )
+        self._compiled[key] = fn
+        return fn
+
+    # -- introspection -------------------------------------------------------------
+
+    def lowered_text(self, job: PaperJob, n: int, seed: int = 0) -> str:
+        """Compiled HLO of the offloaded program — used by tests/benchmarks to
+        assert the collective structure (chain depth vs broadcast tree)."""
+        operands, _ = job.make_instance(seed)
+        devices, _ = self.select_clusters(n=n)
+        mesh = Mesh(np.asarray(devices), (AXIS,))
+        fn = self._build(job, mesh, n, tuple(sorted(operands)), (8,))
+        ftype = jnp.zeros((), jnp.float64).dtype  # honours jax_enable_x64
+        args_shape = (n, 8) if self.config.info_dist == "p2p_chain" else (8,)
+        sds = [jax.ShapeDtypeStruct(args_shape, ftype)]
+        for name in sorted(operands):
+            arr = np.asarray(operands[name])
+            sds.append(jax.ShapeDtypeStruct(arr.shape, ftype))
+        return fn.lower(*sds).compile().as_text()
+
+
+def count_collectives(hlo: str) -> Dict[str, int]:
+    """Occurrences of each collective op kind in an HLO dump."""
+    kinds = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    counts = {}
+    for k in kinds:
+        counts[k] = sum(
+            1 for line in hlo.splitlines()
+            if f" {k}" in line or line.lstrip().startswith(f"{k}")
+            if "start" not in line.split("=")[0]
+        )
+    return counts

@@ -1,0 +1,360 @@
+"""Cycle-accurate discrete-event simulator of the Occamy offload process.
+
+This is the reproduction's stand-in for the paper's QuestaSim RTL measurements
+(§5.1): a discrete-event model of the nine offload phases (fig. 3) over the
+Occamy topology, parameterized by the paper's measured constants
+(:mod:`repro.core.params`).  It reproduces, mechanistically rather than by
+curve-fitting:
+
+* the O(n) baseline wakeup (sequential IPIs limited by CVA6's outstanding
+  write budget) vs O(1) multicast wakeup (§5.5 B);
+* the quadrant-step behaviour of job-pointer retrieval (§5.5 C);
+* the single-read-port wide-SPM contention: DMA transfers are granted
+  sequentially in arrival order and perfectly interleave, so the port is
+  work-conserving (§5.5 E) — implemented as a FIFO server at 64 B/cycle;
+* the second-order effect of dispatch skew: offload phases offset the
+  clusters' phase-E start times, which *hides* SPM contention, so part of the
+  offload overhead is recovered (§5.2) — this falls out of the FIFO model;
+* phase E/G coupling: a cluster's writeback can stall behind another
+  cluster's operand fetch (§5.5 G) — both phases share the wide port;
+* the software central-counter barrier vs the job completion unit (§4.3).
+
+Three execution modes:
+
+* ``baseline``  — the unmodified system (sequential IPIs, phases C/D, software
+  central-counter barrier);
+* ``multicast`` — the paper's extensions (multicast job-info distribution and
+  wakeup, phases C/D collapsed, job completion unit);
+* ``ideal``     — the job as if it materialized on the accelerator at t=0 with
+  no offload phases (the paper's "executed directly on the device"); used to
+  compute the offload overhead t_base - t_ideal (§5.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.params import DEFAULT_PARAMS, OccamyParams
+from repro.core.phases import Phase, PhaseSpan, PhaseStats
+
+Mode = str
+MODES = ("baseline", "multicast", "ideal")
+
+
+@dataclasses.dataclass
+class JobSpec:
+    """Phase-level description of an offloadable job (simulator view).
+
+    ``operand_transfers(n, i)`` / ``writeback_transfers(n, i)`` return the DMA
+    transfer sizes in bytes issued by cluster ``i`` when the job runs on ``n``
+    clusters.  ``compute_cycles(n, i)`` is phase-F work excluding the
+    ``f_init`` constant.  ``levels`` > 1 inserts software global barriers
+    inside phase F (BFS's level-synchronous traversal).
+    """
+
+    name: str
+    arg_words: int
+    operand_transfers: "callable"
+    compute_cycles: "callable"
+    writeback_transfers: "callable"
+    levels: int = 1
+
+
+@dataclasses.dataclass
+class SimResult:
+    job: str
+    mode: Mode
+    n: int
+    total: float                      # host-to-host cycles (device-only for ideal)
+    spans: List[PhaseSpan]
+    cluster_done: List[float]         # per-cluster end of phase G
+
+    def phase_stats(self) -> Dict[Phase, PhaseStats]:
+        per_phase: Dict[Phase, List[float]] = {}
+        for s in self.spans:
+            per_phase.setdefault(s.phase, []).append(s.duration)
+        return {p: PhaseStats.of(p, d) for p, d in per_phase.items()}
+
+
+# ---------------------------------------------------------------------------
+# The wide interconnect / SPM port: a single work-conserving FIFO server.
+# ---------------------------------------------------------------------------
+
+
+class WidePort:
+    """Single-ported wide SPM interface, 64 B/cycle, grant in arrival order.
+
+    The paper (§5.5 E): "the wide SPM has a single read port, all clusters
+    have to contend access to this resource, so the DMA transfers from every
+    cluster will be granted sequentially [...] multiple short DMA transfers
+    perfectly interleave, thus taking the same amount of time as a single DMA
+    transfer of combined length at the SPM interface".
+    """
+
+    def __init__(self, bw: float):
+        self.bw = bw
+        self.free_at = 0.0
+
+    def serve(self, eligible: float, nbytes: float) -> float:
+        start = max(self.free_at, eligible)
+        end = start + max(1.0, nbytes / self.bw)
+        self.free_at = end
+        return end
+
+
+@dataclasses.dataclass
+class _Chain:
+    """A cluster's pending port requests: E transfers then G transfers."""
+
+    cluster: int
+    e_sizes: List[float]
+    g_sizes: List[float]
+    next_idx: int = 0
+    stage: int = 0                    # 0 = E, 1 = G, 2 = done
+    eligible: float = 0.0
+    e_end: float = 0.0
+    g_end: float = 0.0
+    g_gap: Optional["callable"] = None  # e_end -> eligibility of first G transfer
+
+    def done(self) -> bool:
+        return self.stage == 2
+
+
+def _run_port(port: WidePort, chains: List[_Chain], latency: float) -> None:
+    """Serve every chain to completion in FIFO (arrival-order) fashion."""
+    # Clusters with no E transfers resolve their stage boundary immediately.
+    for c in chains:
+        _advance_empty_stages(c, latency)
+    while True:
+        live = [c for c in chains if not c.done()]
+        if not live:
+            return
+        # FIFO: earliest-eligible request first; ties broken by cluster index
+        # (round-robin-ish fairness, deterministic).
+        c = min(live, key=lambda ch: (ch.eligible, ch.cluster))
+        sizes = c.e_sizes if c.stage == 0 else c.g_sizes
+        end = port.serve(c.eligible, sizes[c.next_idx])
+        c.next_idx += 1
+        if c.next_idx < len(sizes):
+            c.eligible = end          # descriptors are pre-programmed
+            continue
+        # Stage complete: the cluster observes completion after the round trip.
+        if c.stage == 0:
+            c.e_end = end + latency
+            c.stage, c.next_idx = 1, 0
+            c.eligible = c.g_gap(c.e_end) if c.g_gap else c.e_end
+            _advance_empty_stages(c, latency)
+        else:
+            c.g_end = end + latency
+            c.stage = 2
+
+
+def _advance_empty_stages(c: _Chain, latency: float) -> None:
+    if c.stage == 0 and not c.e_sizes:
+        c.e_end = c.eligible
+        c.stage = 1
+        c.eligible = c.g_gap(c.e_end) if c.g_gap else c.e_end
+    if c.stage == 1 and not c.g_sizes:
+        c.g_end = c.eligible
+        c.stage = 2
+
+
+# ---------------------------------------------------------------------------
+# The simulator proper.
+# ---------------------------------------------------------------------------
+
+
+def simulate(
+    job: JobSpec,
+    n: int,
+    mode: Mode,
+    params: OccamyParams = DEFAULT_PARAMS,
+) -> SimResult:
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}")
+    if not (1 <= n <= params.num_clusters):
+        raise ValueError(f"n={n} outside [1, {params.num_clusters}]")
+    p = params
+    spans: List[PhaseSpan] = []
+
+    # ----- Phase A: send job information (host) ------------------------------
+    if mode == "ideal":
+        a_end = 0.0
+    else:
+        a_dur = p.host_info_base + p.host_info_per_word * (1 + job.arg_words)
+        spans.append(PhaseSpan(Phase.A, -1, 0.0, a_dur))
+        a_end = a_dur
+
+    # ----- Phase B: wakeup ----------------------------------------------------
+    wake = [0.0] * n
+    if mode == "baseline":
+        # Sequential IPIs, descending cluster index so that cluster 0 (which
+        # hosts the barrier counter) is woken last (§5.5 H).
+        for k in range(n):
+            i = n - 1 - k
+            issue = a_end + p.host_store_first + k * p.host_store_next
+            wake[i] = issue + p.noc_propagation
+    elif mode == "multicast":
+        w = a_end + p.host_store_first + p.noc_propagation
+        wake = [w] * n
+    for i in range(n):
+        if mode != "ideal":
+            spans.append(PhaseSpan(Phase.B, i, a_end, wake[i]))
+
+    # ----- Phase C: retrieve job pointer ---------------------------------------
+    c_end = list(wake)
+    if mode == "baseline":
+        for i in range(n):
+            c_end[i] = wake[i] + p.narrow_latency(i, 0)
+    elif mode == "multicast":
+        # Job info already multicast into every TCDM: local load only.
+        for i in range(n):
+            c_end[i] = wake[i] + p.narrow_local
+    for i in range(n):
+        if mode != "ideal":
+            spans.append(PhaseSpan(Phase.C, i, wake[i], c_end[i]))
+
+    # ----- Phase D: retrieve job arguments -------------------------------------
+    d_end = list(c_end)
+    if mode == "baseline":
+        # Remote clusters DMA the argument block out of cluster 0's TCDM.
+        # Serialized at cluster 0's port (FIFO in arrival order).
+        order = sorted(range(1, n), key=lambda i: c_end[i] + p.dma_args_setup)
+        port_free = 0.0
+        for i in order:
+            eligible = c_end[i] + p.dma_args_setup
+            start = max(port_free, eligible)
+            serve_end = start + p.cluster0_port_occupancy
+            port_free = serve_end
+            d_end[i] = serve_end + p.dma_latency
+        d_end[0] = c_end[0]
+    for i in range(n):
+        if mode != "ideal":
+            spans.append(PhaseSpan(Phase.D, i, c_end[i], d_end[i]))
+
+    # ----- Phases E, F, G: operands, compute, writeback -------------------------
+    port = WidePort(p.wide_bw_bytes_per_cycle)
+    e_starts = [0.0] * n if mode == "ideal" else d_end
+    ops = [list(job.operand_transfers(n, i)) for i in range(n)]
+    wbs = [list(job.writeback_transfers(n, i)) for i in range(n)]
+    f_dur = [
+        p.phase_sync + p.f_init + job.compute_cycles(n, i) + p.phase_sync
+        for i in range(n)
+    ]
+
+    if job.levels <= 1:
+        chains = []
+        for i in range(n):
+            gap = (lambda fd, k: (lambda e_end: e_end + fd + p.dma_setup(k)))(
+                f_dur[i], len(wbs[i])
+            )
+            chains.append(
+                _Chain(
+                    cluster=i,
+                    e_sizes=ops[i],
+                    g_sizes=wbs[i],
+                    eligible=e_starts[i] + p.dma_setup(len(ops[i])),
+                    g_gap=gap,
+                )
+            )
+        _run_port(port, chains, p.dma_latency)
+        e_end = [c.e_end for c in chains]
+        f_end = [e_end[i] + f_dur[i] for i in range(n)]
+        g_end = [c.g_end for c in chains]
+    else:
+        # Level-synchronous jobs (BFS): complete phase E for all clusters,
+        # run `levels` compute segments separated by software global barriers,
+        # then write back.  The barriers serialize everything, so the E/G
+        # overlap the single-level path models cannot occur.
+        chains = [
+            _Chain(
+                cluster=i,
+                e_sizes=ops[i],
+                g_sizes=[],
+                eligible=e_starts[i] + p.dma_setup(len(ops[i])),
+            )
+            for i in range(n)
+        ]
+        _run_port(port, chains, p.dma_latency)
+        e_end = [c.e_end for c in chains]
+        t = [e + p.phase_sync + p.f_init for e, _ in zip(e_end, range(n))]
+        per_level = [job.compute_cycles(n, i) / job.levels for i in range(n)]
+        for lvl in range(job.levels):
+            t = [t[i] + per_level[i] for i in range(n)]
+            if lvl < job.levels - 1:
+                joined = max(t) + intra_barrier(n, p)
+                t = [joined] * n
+        f_end = [t[i] + p.phase_sync for i in range(n)]
+        gchains = [
+            _Chain(
+                cluster=i,
+                e_sizes=[],
+                g_sizes=wbs[i],
+                eligible=f_end[i] + p.dma_setup(len(wbs[i])),
+            )
+            for i in range(n)
+        ]
+        _run_port(port, gchains, p.dma_latency)
+        g_end = [c.g_end for c in gchains]
+
+    for i in range(n):
+        spans.append(PhaseSpan(Phase.E, i, e_starts[i], e_end[i]))
+        spans.append(PhaseSpan(Phase.F, i, e_end[i], f_end[i]))
+        spans.append(PhaseSpan(Phase.G, i, f_end[i], g_end[i]))
+
+    # ----- Phase H: notify job completion ---------------------------------------
+    if mode == "ideal":
+        total = max(g_end)
+        return SimResult(job.name, mode, n, total, spans, g_end)
+
+    h_start = max(g_end)
+    if mode == "baseline":
+        # Software central-counter barrier in cluster 0's TCDM: each DMA core
+        # runs the arrival routine, AMO-increments the counter (serialized),
+        # and the last arriver IPIs the host.
+        arrivals = sorted(
+            (g_end[i] + p.phase_sync + p.sw_barrier_code + p.narrow_latency(i, 0), i)
+            for i in range(n)
+        )
+        counter_free = 0.0
+        for t_arr, _ in arrivals:
+            counter_free = max(counter_free, t_arr) + p.amo_service
+        host_irq = counter_free + p.host_store_first + p.noc_propagation
+    else:
+        # Job completion unit (§4.3): posted writes to the CLINT arrivals
+        # register; the unit fires the host IPI when arrivals == offload.
+        arrivals = [
+            g_end[i] + p.phase_sync + p.unit_arrival_code + p.clint_travel
+            for i in range(n)
+        ]
+        host_irq = max(arrivals) + p.unit_fire + p.noc_propagation
+    spans.append(PhaseSpan(Phase.H, -1, h_start, host_irq))
+
+    # ----- Phase I: resume operation on host -------------------------------------
+    total = host_irq + p.host_resume
+    spans.append(PhaseSpan(Phase.I, -1, host_irq, total))
+    return SimResult(job.name, mode, n, total, spans, g_end)
+
+
+def intra_barrier(n: int, p: OccamyParams = DEFAULT_PARAMS) -> float:
+    """In-job software global barrier (BFS level sync): central counter."""
+    return p.narrow_cross_quadrant + p.amo_service * n
+
+
+def offload_overhead(job: JobSpec, n: int, mode: Mode = "baseline",
+                     params: OccamyParams = DEFAULT_PARAMS) -> float:
+    """The paper's §5.2 metric: t_mode - t_ideal."""
+    t = simulate(job, n, mode, params).total
+    t_ideal = simulate(job, n, "ideal", params).total
+    return t - t_ideal
+
+
+def speedups(job: JobSpec, n: int, params: OccamyParams = DEFAULT_PARAMS):
+    """(ideal speedup, achieved speedup, restoration) — fig. 8 metrics."""
+    base = simulate(job, n, "baseline", params).total
+    ideal = simulate(job, n, "ideal", params).total
+    ext = simulate(job, n, "multicast", params).total
+    s_ideal = base / ideal
+    s_ext = base / ext
+    return s_ideal, s_ext, s_ext / s_ideal

@@ -1,0 +1,13 @@
+"""Deterministic synthetic data pipeline.
+
+A seeded, stateless token stream: batch ``i`` is a pure function of
+(seed, i), so any worker can regenerate any batch — exactly the property
+fault-tolerant restart needs (resume from step k replays batch k bit-for-bit,
+tested in tests/test_checkpoint.py).  The stream synthesizes a Zipf-ish
+unigram mixture with short-range structure so losses move during the
+end-to-end examples (unstructured uniform tokens give a flat loss).
+"""
+
+from repro.data.pipeline import DataConfig, SyntheticStream, input_specs
+
+__all__ = ["DataConfig", "SyntheticStream", "input_specs"]

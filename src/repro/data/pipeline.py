@@ -1,0 +1,102 @@
+"""Synthetic token stream + dry-run input specs.
+
+``SyntheticStream.batch(i)`` is a pure function of (seed, i): restartable,
+shardable (each data-parallel group slices its rows), and cheap.  The token
+distribution is Zipf-like with a 30 % repeat-previous structure so a model
+can actually reduce loss on it (examples/train_lm.py shows ~2-nat drops in a
+few hundred steps).
+
+``input_specs`` is the dry-run contract (system prompt step 2): weak-type-
+correct ``ShapeDtypeStruct`` stand-ins for every model input of a given
+(architecture × input-shape) cell — no device allocation ever happens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    batch_size: int
+    seq_len: int
+    seed: int = 0
+    zipf_alpha: float = 1.1
+    repeat_prob: float = 0.3
+
+
+class SyntheticStream:
+    def __init__(self, cfg: DataConfig, model_cfg: ModelConfig | None = None):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+
+    def batch(self, index: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        rng = np.random.Generator(np.random.Philox(key=[c.seed, index]))
+        b, s = c.batch_size, c.seq_len
+        # Zipf-ish unigram draw via inverse-CDF power law.
+        u = rng.random((b, s + 1))
+        base = np.minimum(
+            (c.vocab_size * u ** c.zipf_alpha).astype(np.int64),
+            c.vocab_size - 1,
+        )
+        # Short-range structure: repeat the previous token with prob p.
+        rep = rng.random((b, s + 1)) < c.repeat_prob
+        toks = base.copy()
+        for col in range(1, s + 1):
+            toks[:, col] = np.where(rep[:, col], toks[:, col - 1], toks[:, col])
+        out = {
+            "tokens": toks[:, :s].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+        mc = self.model_cfg
+        if mc is not None and mc.frontend and mc.frontend.kind == "vision_stub":
+            # Precomputed patch embeddings (the SigLIP stub): deterministic.
+            p = mc.frontend.n_prefix_tokens
+            out["patches"] = rng.standard_normal(
+                (b, p, mc.d_model)).astype(np.float32) * 0.02
+        return out
+
+    def __iter__(self):
+        i = 0
+        while True:
+            yield self.batch(i)
+            i += 1
+
+
+# --- dry-run input specs -----------------------------------------------------------
+
+
+def input_specs(
+    cfg: ModelConfig,
+    *,
+    mode: str,                  # "train" | "prefill" | "decode"
+    batch: int,
+    seq: int,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend and cfg.frontend.kind == "vision_stub":
+        p = cfg.frontend.n_prefix_tokens
+        text = max(seq - p, 1)
+        specs["patches"] = jax.ShapeDtypeStruct((batch, p, cfg.d_model), f32)
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, text), i32)
+        if mode == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((batch, text), i32)
+        return specs
+    specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    if mode == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    return specs

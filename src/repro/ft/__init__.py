@@ -1,0 +1,6 @@
+"""Fault tolerance: watchdog, straggler mitigation, elastic rescale."""
+
+from repro.ft.straggler import BackupOffload, StepWatchdog
+from repro.ft.elastic import elastic_restore
+
+__all__ = ["BackupOffload", "StepWatchdog", "elastic_restore"]

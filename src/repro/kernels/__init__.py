@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot spots + framework hot spots.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), with ops.py as the
+jit'd entry points (impl switch pallas/xla/auto) and ref.py the pure-jnp
+oracles.  All kernels are validated against ref.py with interpret=True on CPU
+(tests/test_kernels.py) and target TPU tiling (MXU 128×128, (8,128) VREGs).
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.atax import atax
+from repro.kernels.axpy import axpy
+from repro.kernels.covariance import covariance
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul
+from repro.kernels.ssm_scan import ssm_scan
+
+__all__ = ["atax", "axpy", "covariance", "flash_attention", "matmul", "ops", "ref", "ssm_scan"]

@@ -1,0 +1,69 @@
+"""AXPY Pallas TPU kernel: z = alpha * x + y  (BLAS-1, paper §5.1).
+
+TPU adaptation: the 1-D vector is viewed as (rows, 1024) lane-aligned tiles
+living in VMEM; each grid step streams one (block_rows, 1024) tile through
+the VPU.  alpha arrives in SMEM as a scalar-prefetch operand — the analogue
+of the paper's job-argument word (it is *job information*, not an operand,
+exactly the distinction §3.2 draws).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default, min_tile, pad_to, round_up
+
+LANES = 1024          # 8 * 128: one f32 VREG row of 8 sublanes
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, z_ref):
+    alpha = alpha_ref[0].astype(jnp.float32)
+    z_ref[...] = (
+        alpha * x_ref[...].astype(jnp.float32) + y_ref[...].astype(jnp.float32)
+    ).astype(z_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def axpy(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    alpha: jnp.ndarray | float,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = interpret_default()
+    if x.shape != y.shape or x.ndim != 1:
+        raise ValueError(f"axpy wants equal 1-D shapes, got {x.shape}, {y.shape}")
+    n = x.shape[0]
+    sub, _ = min_tile(x.dtype)
+    rows_grain = max(block_rows, sub)
+    padded = round_up(max(n, 1), LANES * rows_grain)
+    rows = padded // LANES
+    x2 = pad_to(x, (padded,)).reshape(rows, LANES)
+    y2 = pad_to(y, (padded,)).reshape(rows, LANES)
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1)
+
+    grid = (rows // rows_grain,)
+    z2 = pl.pallas_call(
+        _axpy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((rows_grain, LANES), lambda i, *_: (i, 0)),
+                pl.BlockSpec((rows_grain, LANES), lambda i, *_: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((rows_grain, LANES), lambda i, *_: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), x.dtype),
+        interpret=interpret,
+    )(alpha_arr, x2, y2)
+    return z2.reshape(padded)[:n]

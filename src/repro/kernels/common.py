@@ -1,0 +1,40 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+Hardware adaptation note (DESIGN.md §2): the paper's kernels are double
+precision on Snitch FPUs.  TPU MXU/VPU have no fp64 datapath, so the TPU
+adaptation targets float32 (and bfloat16 where numerically safe); the fp64
+offload jobs keep the XLA path.  Block shapes honour the TPU tiling grain —
+(8, 128) for f32, (16, 128) for bf16 — and MXU-friendly 128×128 tiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interpret_default() -> bool:
+    """Pallas TPU kernels run in interpret mode off-TPU (CPU CI validation)."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def min_tile(dtype) -> tuple:
+    """Minimum TPU tile (sublane, lane) for a dtype."""
+    d = jnp.dtype(dtype)
+    if d == jnp.dtype(jnp.bfloat16):
+        return (16, 128)
+    if d in (jnp.dtype(jnp.int8), jnp.dtype(jnp.float8_e4m3fn)):
+        return (32, 128)
+    return (8, 128)
+
+
+def pad_to(x: jnp.ndarray, shape: tuple) -> jnp.ndarray:
+    """Zero-pad trailing dims of ``x`` up to ``shape``."""
+    pads = [(0, t - s) for s, t in zip(x.shape, shape)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)

@@ -1,0 +1,65 @@
+"""Covariance Pallas TPU kernel: cov(M×M) of an M×N data matrix (PolyBench).
+
+TPU adaptation: a SYRK-shaped kernel.  The row means are computed by a cheap
+first pass (pure XLA — it is bandwidth-trivial); the Pallas kernel then
+computes centred(i)·centred(j)ᵀ output tiles on the MXU, streaming (bm, N)
+row panels of the data through VMEM.  Grid is 2-D over output tiles; the
+row panels are re-read N_tiles times, which is the roofline-optimal choice
+whenever M ≤ VMEM panel budget (napkin math in benchmarks/kernel_bench.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default, min_tile, pad_to, round_up
+
+
+def _cov_kernel(ci_ref, cj_ref, o_ref, *, denom: float):
+    o_ref[...] = (
+        jnp.dot(ci_ref[...], cj_ref[...].T, preferred_element_type=jnp.float32)
+        / denom
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def covariance(
+    data: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = interpret_default()
+    if data.ndim != 2:
+        raise ValueError(f"covariance wants (M, N), got {data.shape}")
+    m, n = data.shape
+    if n < 2:
+        raise ValueError("need at least 2 samples")
+    sub, lane = min_tile(data.dtype)
+    bm = min(block_m, round_up(m, sub))
+    mp = round_up(m, bm)
+    np_ = round_up(n, lane)
+
+    centred = data - jnp.mean(data, axis=1, keepdims=True)
+    # Zero-padding the sample axis is safe: padded columns contribute 0 to the
+    # dot products; padded rows produce discarded tiles.
+    c2 = pad_to(centred.astype(data.dtype), (mp, np_))
+    steps = mp // bm
+
+    out = pl.pallas_call(
+        functools.partial(_cov_kernel, denom=float(n - 1)),
+        grid=(steps, steps),
+        in_specs=[
+            pl.BlockSpec((bm, np_), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, np_), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, mp), data.dtype),
+        interpret=interpret,
+    )(c2, c2)
+    return out[:m, :m]

@@ -1,0 +1,151 @@
+"""Causal flash attention Pallas TPU kernel (online softmax, O(S) memory).
+
+The framework's phase-F hot spot: 32k-token prefill is quadratic in HBM
+traffic with naive attention; this kernel streams (block_q × block_kv) score
+tiles through VMEM with the standard online-softmax recurrence, so the S×S
+score matrix never materializes.
+
+TPU adaptation notes:
+  * running max/denominator are kept as (block_q, 128) f32 VMEM scratch with
+    replicated lanes (TPU vector layouts want the 128-lane grain; a (bq, 1)
+    scalar column would be re-laid-out on every op);
+  * masks are built from 2-D ``broadcasted_iota`` (1-D iota does not lower on
+    TPU); KV padding beyond the true sequence length is masked the same way;
+  * tiles strictly above the causal diagonal are skipped via ``pl.when`` on
+    the grid indices — with the kv-innermost grid this prunes ~half the work
+    at no bookkeeping cost (block shapes are the §Perf hillclimbing knob).
+
+GQA is handled by the wrapper in ops.py (KV heads are repeated to query
+heads before the call; XLA fuses the broadcast into the block gather).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default, min_tile, pad_to, round_up
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, kv_steps: int, block_q: int, block_kv: int, sm_scale: float,
+    causal: bool, skv_real: int,
+):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        # Skip tiles strictly above the causal diagonal.
+        live = ki * block_kv <= qi * block_q + block_q - 1
+    else:
+        live = ki >= 0  # always
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0].astype(jnp.float32)           # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)           # (bkv, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+        cols = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1
+        )
+        mask = cols < skv_real                     # KV padding never attends
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0
+            )
+            mask = mask & (rows >= cols)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0:1]                      # (bq, 1), lanes replicated
+        l_prev = l_ref[:, 0:1]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)                      # (bq, bkv)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+    @pl.when(ki == kv_steps - 1)
+    def _flush():
+        l = l_ref[:, 0:1]
+        l = jnp.where(l == 0.0, 1.0, l)             # fully-masked (padded) rows
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,          # (B, H, Sq, D)
+    k: jnp.ndarray,          # (B, H, Skv, D)
+    v: jnp.ndarray,          # (B, H, Skv, D)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = interpret_default()
+    if q.ndim != 4 or k.shape != v.shape or q.shape[:2] != k.shape[:2]:
+        raise ValueError(f"flash shapes q={q.shape} k={k.shape} v={v.shape}")
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    sub, _ = min_tile(q.dtype)
+    bq = min(block_q, round_up(sq, sub))
+    bkv = min(block_kv, round_up(skv, sub))
+    sqp, skvp = round_up(sq, bq), round_up(skv, bkv)
+    dp = round_up(d, LANES)
+    sm_scale = 1.0 / (d ** 0.5)
+
+    qp = pad_to(q.reshape(b * h, sq, d), (b * h, sqp, dp))
+    kp = pad_to(k.reshape(b * h, skv, d), (b * h, skvp, dp))
+    vp = pad_to(v.reshape(b * h, skv, d), (b * h, skvp, dp))
+    kv_steps = skvp // bkv
+    grid = (b * h, sqp // bq, kv_steps)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        kv_steps=kv_steps,
+        block_q=bq,
+        block_kv=bkv,
+        sm_scale=sm_scale,
+        causal=causal,
+        skv_real=skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dp), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bkv, dp), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, bkv, dp), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dp), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sqp, dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :d].reshape(b, h, sq, d)

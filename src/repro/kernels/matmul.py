@@ -1,0 +1,75 @@
+"""Tiled matmul Pallas TPU kernel: C[M,N] = A[M,K] @ B[K,N]  (BLAS-3, §5.1).
+
+TPU adaptation of the paper's Snitch dgemm: MXU-aligned 128×128×128 tiles,
+K-innermost grid with a float32 VMEM accumulator (the MXU accumulates in
+f32 regardless of input dtype), revolving A/B blocks HBM→VMEM via BlockSpec
+pipelining.  Block shapes are the hillclimbing knob (§Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default, min_tile, pad_to, round_up
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = interpret_default()
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    sub, lane = min_tile(a.dtype)
+    bm = min(block_m, round_up(m, sub))
+    bn = min(block_n, round_up(n, lane))
+    bk = min(block_k, round_up(k, lane))
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    a2 = pad_to(a, (mp, kp))
+    b2 = pad_to(b, (kp, np_))
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a2, b2)
+    return out[:m, :n]

@@ -1,0 +1,73 @@
+"""Unified jit'd entry points for the Pallas kernels.
+
+Every op takes ``impl`` ∈ {"pallas", "xla", "auto"}:
+  * "pallas" — the TPU kernel (interpret mode automatically off-TPU);
+  * "xla"    — the pure-jnp oracle (the dry-run path: TPU Pallas kernels do
+               not lower on the CPU backend);
+  * "auto"   — pallas on TPU, xla elsewhere (the framework default).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.atax import atax as _atax_pallas
+from repro.kernels.axpy import axpy as _axpy_pallas
+from repro.kernels.covariance import covariance as _cov_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.matmul import matmul as _matmul_pallas
+
+IMPLS = ("pallas", "xla", "auto")
+
+
+def _resolve(impl: str) -> str:
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+def axpy(x, y, alpha, *, impl: str = "auto", **kw) -> jnp.ndarray:
+    if _resolve(impl) == "pallas":
+        return _axpy_pallas(x, y, alpha, **kw)
+    return ref.axpy(x, y, alpha)
+
+
+def matmul(a, b, *, impl: str = "auto", **kw) -> jnp.ndarray:
+    if _resolve(impl) == "pallas":
+        return _matmul_pallas(a, b, **kw)
+    return ref.matmul(a, b)
+
+
+def atax(a, x, *, impl: str = "auto", **kw) -> jnp.ndarray:
+    if _resolve(impl) == "pallas":
+        return _atax_pallas(a, x, **kw)
+    return ref.atax(a, x)
+
+
+def covariance(data, *, impl: str = "auto", **kw) -> jnp.ndarray:
+    if _resolve(impl) == "pallas":
+        return _cov_pallas(data, **kw)
+    return ref.covariance(data)
+
+
+def attention(
+    q, k, v, *, causal: bool = True, impl: str = "auto", **kw
+) -> jnp.ndarray:
+    """Multi-head attention with GQA support: k/v may have fewer heads than q
+    (q heads must be a multiple); KV heads are repeated before the kernel."""
+    hq, hkv = q.shape[1], k.shape[1]
+    if hq != hkv:
+        if hq % hkv:
+            raise ValueError(f"GQA heads {hq} not a multiple of {hkv}")
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if _resolve(impl) == "pallas":
+        return _flash_pallas(q, k, v, causal=causal, **kw)
+    return ref.attention(q, k, v, causal=causal)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def axpy(x: jnp.ndarray, y: jnp.ndarray, alpha) -> jnp.ndarray:
+    return jnp.asarray(alpha, x.dtype) * x + y
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+def atax(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    a32 = a.astype(jnp.float32)
+    return (a32.T @ (a32 @ x.astype(jnp.float32))).astype(a.dtype)
+
+
+def covariance(data: jnp.ndarray) -> jnp.ndarray:
+    d32 = data.astype(jnp.float32)
+    centred = d32 - jnp.mean(d32, axis=1, keepdims=True)
+    return (centred @ centred.T / (data.shape[1] - 1)).astype(data.dtype)
+
+
+def attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True
+) -> jnp.ndarray:
+    """Naive O(S²) attention, f32 accumulation — the flash oracle."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Sequential oracle for the SSM scan kernel: h_t = a_t·h_{t-1} + b_t,
+    y_t = Σ_n h_t[:, n]·c_t[n].  a, b: (B,S,D,N); c: (B,S,N) -> (B,S,D)."""
+    import jax
+
+    def step(h, abc):
+        a_t, b_t, c_t = abc
+        h = a_t * h + b_t
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    h0 = jnp.zeros(a.shape[:1] + a.shape[2:], jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (a.astype(jnp.float32).swapaxes(0, 1),
+         b.astype(jnp.float32).swapaxes(0, 1),
+         c.astype(jnp.float32).swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(a.dtype)

@@ -1,0 +1,3 @@
+"""Launch layer: production meshes, multi-pod dry-run, train/serve drivers."""
+from repro.launch.mesh import make_mesh, make_production_mesh
+__all__ = ["make_mesh", "make_production_mesh"]

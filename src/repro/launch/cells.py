@@ -1,0 +1,179 @@
+"""Cell builder: one AOT-compilable program per (architecture × shape).
+
+A *cell* is the unit of the dry-run and the roofline table:
+
+    train_4k     train_step       seq 4096,   global batch 256
+    prefill_32k  prefill          seq 32768,  global batch 32
+    decode_32k   serve_step       KV cache 32768, global batch 128
+    long_500k    serve_step       state/cache 524288, global batch 1
+                 (sub-quadratic archs only: zamba2, falcon-mamba —
+                  full-attention archs are skipped per the assignment,
+                  see DESIGN.md §6)
+
+``build_cell`` returns (jitted_fn, example_args_as_ShapeDtypeStructs, meta);
+``fn.lower(*args).compile()`` never allocates device memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.pipeline import input_specs
+from repro.dist.sharding import (
+    batch_specs, cache_specs, param_specs, to_shardings,
+)
+from repro.models.config import ModelConfig
+from repro.models.model import CallConfig, init_cache, init_params, prefill
+from repro.models.registry import count_params, get
+from repro.launch.roofline import model_flops_forward, model_flops_train
+from repro.serve.engine import build_serve_step
+from repro.train.step import TrainConfig, build_train_step
+
+SHAPES: Dict[str, Tuple[str, int, int]] = {
+    "train_4k": ("train", 4096, 256),
+    "prefill_32k": ("prefill", 32768, 32),
+    "decode_32k": ("decode", 32768, 128),
+    "long_500k": ("decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention architecture: 500k-token dense KV "
+                       "decode is out of regime (assignment: run for "
+                       "SSM/hybrid only)")
+    return True, ""
+
+
+@dataclasses.dataclass
+class CellMeta:
+    arch: str
+    shape: str
+    mode: str
+    seq: int
+    global_batch: int
+    tokens: int
+    chips: int
+    model_flops: float
+    params_total: int
+    params_active: int
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def default_call(mode: str, seq: int, overrides: Optional[Dict] = None,
+                 mesh: Optional[Mesh] = None,
+                 cfg: Optional[ModelConfig] = None) -> CallConfig:
+    kw: Dict[str, Any] = {}
+    if mode in ("train", "prefill"):
+        kw["attn_impl"] = "chunked" if seq > 2048 else "xla"
+        kw["attn_chunk"] = 512
+        kw["remat"] = mode == "train"
+    if mode != "train":
+        kw["moe_no_drop"] = mode == "decode"  # decode exact; prefill capacity
+    if overrides:
+        kw.update(overrides)
+    # String-valued sharding knobs resolve against the mesh here (JSON
+    # overrides from the dryrun CLI cannot carry NamedShardings).
+    if mesh is not None:
+        if kw.get("attn_q_sharding") in ("seq_model", "auto"):
+            # scaled q: (B, H, S, d) — sequence over the model axis.
+            # §Perf finding: forcing sequence sharding wins exactly when the
+            # (repeated) head count does NOT divide the model axis (XLA then
+            # falls back to sharding the QK contraction → per-chunk score
+            # all-reduces); when heads divide cleanly, XLA's head-sharded
+            # plan is better and the constraint is withheld ("auto").
+            force = kw["attn_q_sharding"] == "seq_model"
+            heads = cfg.n_heads if cfg is not None else 0
+            tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+            if force or (heads and heads % tp != 0):
+                kw["attn_q_sharding"] = NamedSharding(
+                    mesh, P(None, None, "model", None))
+            else:
+                kw["attn_q_sharding"] = None
+        if kw.get("moe_buffer_sharding") == "ep":
+            # (E, C, D) dispatch buffer: experts over the model axis
+            kw["moe_buffer_sharding"] = NamedSharding(
+                mesh, P("model", None, None))
+    return CallConfig(**kw)
+
+
+def build_cell(
+    arch: str,
+    shape: str,
+    mesh: Mesh,
+    call_overrides: Optional[Dict] = None,
+    train_overrides: Optional[Dict] = None,
+):
+    """-> (jitted fn, tuple of ShapeDtypeStruct args, CellMeta)."""
+    cfg = get(arch)
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} × {shape} skipped: {why}")
+    mode, seq, gbatch = SHAPES[shape]
+    chips = int(mesh.devices.size)
+    call = default_call(mode, seq, call_overrides, mesh, cfg)
+
+    key_spec = jax.eval_shape(lambda: jax.random.key(0))
+    key_sds = jax.ShapeDtypeStruct(key_spec.shape, key_spec.dtype)
+    pshapes = jax.eval_shape(lambda k: init_params(k, cfg), key_sds)
+    pspecs = param_specs(pshapes, mesh)
+    n_total = count_params(cfg)
+    n_active = count_params(cfg, active_only=True)
+
+    batch_sds = input_specs(cfg, mode=mode, batch=gbatch, seq=seq)
+
+    if mode == "train":
+        tokens = gbatch * seq
+        tcfg = TrainConfig(**(train_overrides or {}), call=call)
+        fn, pspecs, ospecs, bspecs = build_train_step(
+            cfg, mesh, tcfg, batch_sds)
+        oshapes = {
+            "mu": pshapes, "nu": pshapes,
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        oshapes = jax.eval_shape(
+            lambda p: {"mu": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                       "nu": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                       "count": jnp.zeros((), jnp.int32)}, pshapes)
+        args = (pshapes, oshapes, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        mf = model_flops_train(n_active, tokens)
+    elif mode == "prefill":
+        tokens = gbatch * seq
+        bspecs = batch_specs(batch_sds, mesh)
+
+        def pf(params, batch):
+            return prefill(params, cfg, batch, seq, call)
+
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, gbatch, seq))
+        cspecs = cache_specs(cache_shapes, mesh)
+        fn = jax.jit(
+            pf,
+            in_shardings=(to_shardings(pspecs, mesh),
+                          to_shardings(bspecs, mesh)),
+            out_shardings=(NamedSharding(mesh, P()),
+                           to_shardings(cspecs, mesh)),
+        )
+        args = (pshapes, batch_sds)
+        mf = model_flops_forward(n_active, tokens)
+    else:  # decode
+        tokens = gbatch
+        fn, cspecs, _ = build_serve_step(cfg, mesh, gbatch, seq, call)
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, gbatch, seq))
+        args = (pshapes, cache_shapes, jax.ShapeDtypeStruct((gbatch, 1), jnp.int32))
+        mf = model_flops_forward(n_active, tokens)
+
+    meta = CellMeta(
+        arch=arch, shape=shape, mode=mode, seq=seq, global_batch=gbatch,
+        tokens=tokens, chips=chips, model_flops=mf,
+        params_total=n_total, params_active=n_active,
+    )
+    return fn, args, meta

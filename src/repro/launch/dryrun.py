@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only this entry point sees 512 placeholder devices; tests and benches see 1.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes, prove it fits, and extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+
+Per cell it prints ``compiled.memory_analysis()`` (fits-per-device proof)
+and ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), parses the
+collective schedule out of the partitioned HLO, and appends a JSON record.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.launch.cells import SHAPES, applicable, build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.models.registry import ARCHS, get
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             call_overrides: Optional[Dict] = None,
+             train_overrides: Optional[Dict] = None,
+             keep_hlo: bool = False) -> Dict:
+    cfg = get(arch)
+    ok, why = applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: Dict = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        print(f"[dryrun] {arch} × {shape} × {mesh_name}: SKIPPED ({why})")
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, meta = build_cell(arch, shape, mesh,
+                                call_overrides, train_overrides)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(f"[dryrun] {arch} × {shape} × {mesh_name}")
+    print(f"  memory_analysis: {mem}")
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+    roof = analyze(compiled, meta.model_flops, meta.chips)
+    print(f"  roofline: t_comp={roof.t_compute:.3e}s t_mem={roof.t_memory:.3e}s "
+          f"t_coll={roof.t_collective:.3e}s bottleneck={roof.bottleneck} "
+          f"frac={roof.roofline_fraction:.3f}")
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes_per_device": getattr(mem, "alias_size_in_bytes", None),
+        },
+        tokens=meta.tokens,
+        params_total=meta.params_total,
+        params_active=meta.params_active,
+        roofline=roof.to_dict(),
+    )
+    if keep_hlo:
+        rec["hlo"] = compiled.as_text()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), action="append")
+    ap.add_argument("--shape", choices=sorted(SHAPES), action="append")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true", help="all archs × shapes")
+    ap.add_argument("--out", default=None, help="directory for JSON records")
+    ap.add_argument("--call-override", default=None,
+                    help="JSON dict of CallConfig overrides (hillclimbing)")
+    ap.add_argument("--train-override", default=None,
+                    help="JSON dict of TrainConfig overrides (hillclimbing)")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.all or not args.arch else args.arch
+    shapes = sorted(SHAPES) if args.all or not args.shape else args.shape
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    co = json.loads(args.call_override) if args.call_override else None
+    to = json.loads(args.train_override) if args.train_override else None
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_cell(arch, shape, mp, co, to)
+                except Exception as e:                      # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "pod2x16x16" if mp else "pod16x16",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    n_fail += 1
+                    print(f"[dryrun] {arch} × {shape}: ERROR {e!r}")
+                rec["tag"] = args.tag
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__{args.tag}.json"
+                    with open(os.path.join(args.out, name), "w") as f:
+                        json.dump(rec, f, indent=1)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state — the dry-run sets its
+XLA device-count flag before any JAX initialization, and tests import this
+module under a normal 1-device runtime without side effects.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The target deployment mesh: one v5e pod (16×16 = 256 chips) or two
+    pods (2×16×16 = 512 chips) with a leading ``pod`` axis that composes
+    into data parallelism."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence[jax.Device]] = None) -> Mesh:
+    """Arbitrary mesh over explicit devices (tests, examples, elastic)."""
+    devs = list(devices if devices is not None else jax.devices())
+    n = int(np.prod(shape))
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(tuple(shape)), tuple(axes))

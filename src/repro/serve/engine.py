@@ -1,0 +1,124 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+``build_serve_step`` produces the jitted one-token decode program (the
+dry-run's ``serve_step``) with explicit cache shardings; ``ServeEngine``
+drives it host-side with batched requests, async dispatch (multiple
+outstanding steps — the paper's multiple-outstanding-jobs pattern, §4.3),
+and completion tracking through the CompletionUnit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.completion import CompletionUnit
+from repro.dist.sharding import batch_specs, cache_specs, param_specs, to_shardings
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    CallConfig, decode_step, init_cache, init_params, prefill,
+)
+
+Pytree = Any
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                     call: CallConfig = CallConfig(moe_no_drop=True)):
+    """-> (jitted decode step, cache shardings).  tokens: (B, 1) -> logits."""
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    cspecs = cache_specs(cache_shapes, mesh)
+    key_spec = jax.eval_shape(lambda: jax.random.key(0))
+    pshapes = jax.eval_shape(
+        lambda k: init_params(k, cfg),
+        jax.ShapeDtypeStruct(key_spec.shape, key_spec.dtype))
+    pspecs = param_specs(pshapes, mesh)
+
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens, call)
+
+    tok_sharding = NamedSharding(
+        mesh, batch_specs(
+            {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}, mesh
+        )["tokens"])
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            to_shardings(pspecs, mesh),
+            to_shardings(cspecs, mesh),
+            tok_sharding,
+        ),
+        out_shardings=(
+            NamedSharding(mesh, P()),
+            to_shardings(cspecs, mesh),
+        ),
+        donate_argnums=(1,),
+    )
+    return jitted, cspecs, pspecs
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int = 8
+    max_len: int = 256
+    temperature: float = 0.0         # 0 = greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    """Static-batch decode engine with per-slot generation state."""
+
+    def __init__(self, cfg: ModelConfig, params: Pytree, mesh: Mesh,
+                 scfg: ServeConfig, call: CallConfig = CallConfig(moe_no_drop=True)):
+        self.cfg, self.scfg, self.call = cfg, scfg, call
+        self.mesh = mesh
+        self.params = params
+        self.step_fn, self.cspecs, _ = build_serve_step(
+            cfg, mesh, scfg.batch, scfg.max_len, call)
+        self.unit = CompletionUnit(n_units=8)
+        self._jobid = 0
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 extra_inputs: Optional[Dict[str, np.ndarray]] = None
+                 ) -> np.ndarray:
+        """prompts: (B, S_prompt) int32 -> (B, n_new) generated ids."""
+        b = prompts.shape[0]
+        assert b == self.scfg.batch, (b, self.scfg.batch)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+        logits, cache = prefill(
+            self.params, self.cfg, batch, self.scfg.max_len, self.call)
+        # prefill leaves cache layout to XLA; reshard once to the decode
+        # step's cache sharding (phase-E staging, in offload terms)
+        cache = jax.device_put(cache, to_shardings(self.cspecs, self.mesh))
+        key = jax.random.key(self.scfg.seed)
+        from jax.sharding import NamedSharding
+        from repro.dist.sharding import batch_specs as _bs
+        tok_sh = NamedSharding(self.mesh, _bs(
+            {"t": jax.ShapeDtypeStruct((self.scfg.batch, 1), jnp.int32)},
+            self.mesh)["t"])
+        out = []
+        tok = self._sample(logits[:, -1], key)
+        for i in range(n_new):
+            out.append(tok)
+            job = self._jobid
+            self._jobid += 1
+            self.unit.program(1, job)
+            tok_dev = jax.device_put(tok[:, None], tok_sh)
+            logits, cache = self.step_fn(self.params, cache, tok_dev)
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits[:, 0] if logits.ndim == 3 else logits, key)
+            self.unit.arrive(job, 1)   # step's fused arrival reduction
+            assert self.unit.clear() == job
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,3 @@
+"""Training substrate: step builder with microbatching + sharded AdamW."""
+from repro.train.step import TrainConfig, build_train_step, train_step_fn
+__all__ = ["TrainConfig", "build_train_step", "train_step_fn"]

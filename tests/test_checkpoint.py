@@ -1,0 +1,75 @@
+"""Checkpoint + fault-tolerant restart + elastic rescale (8-device mesh)."""
+
+
+def test_bitwise_resume_and_elastic(subproc, tmp_path):
+    subproc(f"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro import models as M
+from repro.train import TrainConfig, build_train_step
+from repro.optim.adamw import adamw_init
+from repro.data import DataConfig, SyntheticStream
+from repro.dist.sharding import to_shardings
+from repro.checkpoint import save, restore, latest_step
+from repro.ft.elastic import elastic_restore
+
+cfg = M.reduced(M.get("smollm-360m"))
+devs = jax.devices()
+mesh = Mesh(np.array(devs).reshape(4, 2), ("data", "model"))
+dc = DataConfig(vocab_size=cfg.vocab_size, batch_size=8, seq_len=32, seed=7)
+stream = SyntheticStream(dc, cfg)
+bs = {{k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in stream.batch(0).items()}}
+tcfg = TrainConfig(total_steps=20, warmup_steps=2, base_lr=1e-3, microbatches=2)
+step_fn, pspecs, ospecs, bspecs = build_train_step(cfg, mesh, tcfg, bs)
+params = jax.device_put(M.init_params(jax.random.key(0), cfg), to_shardings(pspecs, mesh))
+opt = jax.device_put(adamw_init(params), to_shardings(ospecs, mesh))
+
+for i in range(4):
+    b = jax.device_put(stream.batch(i), to_shardings(bspecs, mesh))
+    params, opt, m = step_fn(params, opt, b, jnp.asarray(i))
+
+d = r"{tmp_path}"
+save(d, 4, {{"params": params, "opt": opt}}, {{"params": pspecs, "opt": ospecs}}, data_index=4)
+assert latest_step(d) == 4
+
+# continue 2 steps -> reference loss
+for i in range(4, 6):
+    b = jax.device_put(stream.batch(i), to_shardings(bspecs, mesh))
+    params, opt, m = step_fn(params, opt, b, jnp.asarray(i))
+ref = float(m["loss"])
+
+# simulated failure: restore and replay -> bitwise identical
+st, di, state = restore(d, mesh, {{"params": pspecs, "opt": ospecs}})
+assert (st, di) == (4, 4)
+p2, o2 = state["params"], state["opt"]
+for i in range(di, 6):
+    b = jax.device_put(stream.batch(i), to_shardings(bspecs, mesh))
+    p2, o2, m2 = step_fn(p2, o2, b, jnp.asarray(i))
+assert float(m2["loss"]) == ref, (float(m2["loss"]), ref)
+
+# elastic: resume the same run on only 2 surviving devices
+ks = jax.eval_shape(lambda: jax.random.key(0))
+pshapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                         jax.ShapeDtypeStruct(ks.shape, ks.dtype))
+st, di, state, mesh2 = elastic_restore(d, devs[:2], pshapes)
+step2 = build_train_step(cfg, mesh2, tcfg, bs)[0]
+from repro.dist.sharding import batch_specs
+b = jax.device_put(stream.batch(di), to_shardings(batch_specs(bs, mesh2), mesh2))
+p3, o3, m3 = step2(state["params"], state["opt"], b, jnp.asarray(di))
+assert np.isfinite(float(m3["loss"]))
+print("OK")
+""", devices=8, x64=False)
+
+
+def test_retention_gc(tmp_path):
+    import numpy as np
+    from repro.checkpoint import latest_step, restore, save
+    state = {"params": {"w": np.arange(4.0)}}
+    for step in (1, 2, 3, 4, 5):
+        save(str(tmp_path), step, state, keep=2, data_index=step)
+    import os
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000004", "step_00000005"]
+    st, di, got = restore(str(tmp_path))
+    assert st == 5 and di == 5
+    np.testing.assert_array_equal(got["params"]["w"], np.arange(4.0))

@@ -1,0 +1,59 @@
+"""Dry-run machinery on a small (4×2) mesh: the same cell-builder code path
+the 256/512-chip dry-run uses, kept cheap enough for CI.
+
+The full production sweep (every arch × shape × {16×16, 2×16×16}) is run by
+``python -m repro.launch.dryrun --all --mesh both`` and recorded in
+EXPERIMENTS.md §Dry-run.
+"""
+
+import pytest
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("smollm-360m", "train_4k"),
+    ("smollm-360m", "decode_32k"),
+    ("deepseek-v2-lite-16b", "train_4k"),
+    ("falcon-mamba-7b", "long_500k"),
+    ("zamba2-2.7b", "decode_32k"),
+    ("paligemma-3b", "prefill_32k"),
+])
+def test_cell_lowers_and_compiles_small_mesh(subproc, arch, shape):
+    subproc(f"""
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.launch.cells import build_cell
+from repro.launch.roofline import analyze
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+fn, args, meta = build_cell("{arch}", "{shape}", mesh)
+compiled = fn.lower(*args).compile()
+mem = compiled.memory_analysis()
+roof = analyze(compiled, meta.model_flops, meta.chips)
+assert roof.flops > 0 and roof.bytes_accessed > 0
+assert roof.bottleneck in ("compute", "memory", "collective")
+assert 0 <= roof.roofline_fraction <= 1.5
+print("OK", roof.bottleneck, f"{{roof.roofline_fraction:.4f}}")
+""", devices=8, x64=False, timeout=900)
+
+
+def test_long_500k_skips_full_attention():
+    from repro.launch.cells import applicable
+    from repro.models.registry import get
+    ok, why = applicable(get("yi-9b"), "long_500k")
+    assert not ok and "full-attention" in why
+    ok, _ = applicable(get("falcon-mamba-7b"), "long_500k")
+    assert ok
+    ok, _ = applicable(get("zamba2-2.7b"), "long_500k")
+    assert ok
+
+
+def test_make_production_mesh_shapes(subproc):
+    subproc("""
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh(multi_pod=False)
+assert m1.devices.shape == (16, 16) and m1.axis_names == ("data", "model")
+m2 = make_production_mesh(multi_pod=True)
+assert m2.devices.shape == (2, 16, 16)
+assert m2.axis_names == ("pod", "data", "model")
+print("OK")
+""", devices=512, x64=False)

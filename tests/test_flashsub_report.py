@@ -1,0 +1,66 @@
+"""Unit tests for the perf tooling: flash substitution + report aggregation."""
+
+import json
+import os
+
+from repro.launch.flashsub import AttnShape, attn_shape_for, flash_terms, substitute
+from repro.launch.report import load_records, roofline_table, summarize
+from repro.launch.roofline import Roofline
+from repro.models.registry import get
+
+
+def test_flash_terms_scaling():
+    a = AttnShape(layers=2, batch_global=8, heads=4, head_dim=64, seq=1024)
+    f1, b1 = flash_terms(a, chips=1)
+    f256, b256 = flash_terms(a, chips=256)
+    assert f1 / f256 == 256 and b1 / b256 == 256
+    # doubling seq quadruples flops, doubles streamed bytes
+    a2 = AttnShape(layers=2, batch_global=8, heads=4, head_dim=64, seq=2048)
+    f2, b2 = flash_terms(a2, 1)
+    assert abs(f2 / f1 - 4.0) < 1e-6
+    assert abs(b2 / b1 - 2.0) < 1e-6
+
+
+def test_attn_shape_per_family():
+    assert attn_shape_for(get("falcon-mamba-7b"), "train", 4096, 256) is None
+    z = attn_shape_for(get("zamba2-2.7b"), "train", 4096, 256)
+    assert z.layers == 9            # shared-block applications, not 54
+    d = attn_shape_for(get("deepseek-v2-lite-16b"), "train", 4096, 256)
+    assert d.head_dim == 128 + 64   # MLA nope+rope
+    p = attn_shape_for(get("yi-9b"), "prefill", 32768, 32)
+    assert p.passes_flops == 1.0    # no backward in prefill
+
+
+def test_substitute_adds_terms():
+    stub = Roofline(flops=1e12, bytes_accessed=1e11, collective_bytes=1e9,
+                    collectives={}, model_flops=1e15, chips=256)
+    a = AttnShape(layers=4, batch_global=32, heads=8, head_dim=128, seq=4096)
+    out = substitute(stub, a)
+    assert out.flops > stub.flops
+    assert out.bytes_accessed > stub.bytes_accessed
+    assert out.collective_bytes == stub.collective_bytes
+    assert substitute(stub, None) is stub
+
+
+def test_report_roundtrip(tmp_path):
+    rec = {"arch": "a", "shape": "train_4k", "mesh": "pod16x16",
+           "status": "ok", "tag": "t",
+           "memory": {"argument_bytes_per_device": 1e9,
+                      "output_bytes_per_device": 1e9,
+                      "temp_bytes_per_device": 2e9,
+                      "alias_bytes_per_device": 0},
+           "roofline": {"t_compute_s": 1.0, "t_memory_s": 2.0,
+                        "t_collective_s": 0.5, "bottleneck": "memory",
+                        "useful_flops_fraction": 0.5,
+                        "roofline_fraction": 0.25}}
+    skip = {"arch": "b", "shape": "long_500k", "mesh": "pod16x16",
+            "status": "skipped", "reason": "full-attention", "tag": "t"}
+    for i, r in enumerate((rec, skip)):
+        with open(os.path.join(tmp_path, f"r{i}.json"), "w") as f:
+            json.dump(r, f)
+    recs = load_records(str(tmp_path), tag="t")
+    assert len(recs) == 2
+    table = roofline_table(recs)
+    assert "memory" in table and "SKIP" in table
+    s = summarize(recs)
+    assert "1 ok" in s and "1 documented skips" in s

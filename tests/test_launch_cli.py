@@ -1,0 +1,41 @@
+"""The train/serve CLI drivers end-to-end (tiny reduced runs, subprocess)."""
+
+import os
+import subprocess
+import sys
+
+from conftest import SRC
+
+
+def _run_module(mod: str, *args: str, devices: int = 2, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-u", "-m", mod, *args],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    return proc.stdout
+
+
+def test_train_cli_runs_and_resumes(tmp_path):
+    out = _run_module(
+        "repro.launch.train", "--arch", "smollm-360m", "--reduced",
+        "--steps", "6", "--batch", "2", "--seq", "32", "--mesh", "2x1",
+        "--ckpt", str(tmp_path), "--ckpt-every", "3")
+    assert "done: 6 steps" in out
+    out = _run_module(
+        "repro.launch.train", "--arch", "smollm-360m", "--reduced",
+        "--steps", "8", "--batch", "2", "--seq", "32", "--mesh", "2x1",
+        "--ckpt", str(tmp_path), "--resume")
+    assert "resumed step 6" in out
+    assert "done: 2 steps" in out
+
+
+def test_serve_cli(tmp_path):
+    out = _run_module(
+        "repro.launch.serve", "--arch", "musicgen-large", "--reduced",
+        "--batch", "2", "--prompt-len", "8", "--new-tokens", "4",
+        "--mesh", "2x1")
+    assert "generated 8 tokens" in out

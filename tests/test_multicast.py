@@ -1,0 +1,86 @@
+"""Property tests for the paper's address-mask multicast encoding (§4.2)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import multicast as mc
+
+
+# --- the decoder condition vs a brute-force oracle --------------------------------
+
+
+@given(
+    addr=st.integers(0, (1 << mc.ADDR_BITS) - 1),
+    mask=st.integers(0, (1 << mc.ADDR_BITS) - 1),
+)
+@settings(max_examples=300)
+def test_decode_match_equals_bruteforce(addr, mask):
+    """A request matches a cluster iff one of its encoded addresses lies in
+    that cluster's address map — the paper's AND-reduction must agree with
+    explicit enumeration (capped fanout keeps enumeration tractable)."""
+    if bin(mask).count("1") > 12:
+        mask &= (1 << 12) - 1          # cap fanout at 4096 addresses
+    req = mc.MulticastRequest(addr=addr, mask=mask)
+    maps = mc.occamy_cluster_maps()
+    got = set(mc.matching_ports(req, maps))
+    want = set()
+    for a in req.addresses():
+        for i, am in enumerate(maps):
+            if am.contains(a):
+                want.add(i)
+    assert got == want
+
+
+def test_paper_figure5_example():
+    """Fig. 5: addr=cluster 1 of quadrant 2, mask bits 19 and 21 ->
+    clusters 1 and 3 of quadrants 0 and 2."""
+    addr = (2 << (mc.CLUSTER_OFFSET_BITS + mc.CLUSTER_IDX_BITS)) | (
+        1 << mc.CLUSTER_OFFSET_BITS)
+    mask = (1 << 19) | (1 << 21)
+    req = mc.MulticastRequest(addr=addr, mask=mask)
+    got = mc.decode_cluster_selection(req)
+    want = sorted(q * 4 + c for q in (0, 2) for c in (1, 3))
+    assert got == want
+    assert req.fanout == 4
+
+
+# --- selection encoding round trips ------------------------------------------------
+
+
+@given(st.sets(st.integers(0, mc.NUM_CLUSTERS - 1), min_size=1, max_size=32))
+@settings(max_examples=200)
+def test_multi_request_cover_roundtrip(clusters):
+    """Greedy subcube cover reaches exactly the requested clusters."""
+    reqs = mc.encode_cluster_selection_multi(clusters)
+    reached = set()
+    for r in reqs:
+        members = set(mc.decode_cluster_selection(r))
+        assert not (members & reached), "cover must be disjoint"
+        reached |= members
+    assert reached == clusters
+
+
+@given(
+    base=st.integers(0, mc.NUM_CLUSTERS - 1),
+    varying=st.integers(0, mc.NUM_CLUSTERS - 1),
+)
+@settings(max_examples=200)
+def test_subcube_single_request(base, varying):
+    """Any subcube encodes as exactly one request (the hardware's unit)."""
+    members = sorted({(base & ~varying) | s for s in mc._submasks(varying)})
+    req = mc.encode_cluster_selection(members)
+    assert mc.decode_cluster_selection(req) == members
+
+
+def test_non_subcube_rejected():
+    with pytest.raises(ValueError):
+        mc.encode_cluster_selection([0, 1, 2])     # size 3: not a power of two
+
+
+def test_mask_encoding_counts():
+    """Masking n bits encodes 2^n addresses (§4.2)."""
+    for nbits in range(6):
+        mask = (1 << nbits) - 1
+        req = mc.MulticastRequest(addr=0, mask=mask << mc.CLUSTER_OFFSET_BITS)
+        assert req.fanout == 1 << nbits
+        assert len(list(req.addresses())) == 1 << nbits

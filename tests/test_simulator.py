@@ -1,0 +1,116 @@
+"""The cycle-accurate simulator against the paper's published anchors."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import jobs, simulator
+from repro.core.params import DEFAULT_PARAMS as P
+
+NS = (1, 2, 4, 8, 16, 32)
+
+
+def test_baseline_overhead_at_one_cluster_is_242():
+    """§5.2: average offload overhead at 1 cluster ≈ 242 cycles (σ=65)."""
+    vals = [simulator.offload_overhead(mk().spec, 1, "baseline")
+            for mk in jobs.PAPER_JOBS.values()]
+    assert abs(np.mean(vals) - 242.0) < 10.0
+    assert all(abs(v - 242.0) < 65.0 for v in vals)
+
+
+def test_overhead_grows_with_clusters():
+    """fig. 7: overhead consistently increases with the cluster count."""
+    for mk in jobs.PAPER_JOBS.values():
+        ov = [simulator.offload_overhead(mk().spec, n, "baseline") for n in NS]
+        assert ov[-1] > ov[0] * 1.5, mk().spec.name
+        # app spread grows with n (paper: σ=256 at 32 clusters)
+    at32 = [simulator.offload_overhead(mk().spec, 32, "baseline")
+            for mk in jobs.PAPER_JOBS.values()]
+    assert max(at32) > 1000.0            # paper max: 1146 on 32-cluster matmul
+    assert np.std(at32) > 150.0
+
+
+def test_multicast_beats_baseline_everywhere():
+    for mk in jobs.PAPER_JOBS.values():
+        for n in NS:
+            base = simulator.simulate(mk().spec, n, "baseline").total
+            ext = simulator.simulate(mk().spec, n, "multicast").total
+            ideal = simulator.simulate(mk().spec, n, "ideal").total
+            assert ideal <= ext <= base, (mk().spec.name, n)
+
+
+def test_restoration_bands():
+    """§5.4: extensions restore >70 % of the ideal speedup everywhere; the
+    Amdahl class (axpy/mc/matmul) reaches 70–9x %, the broadcast class
+    (atax/cov/bfs) 85 %+."""
+    for name, mk in jobs.PAPER_JOBS.items():
+        for n in (8, 16, 32):
+            _, _, restored = simulator.speedups(mk().spec, n)
+            assert restored > 0.70, (name, n, restored)
+            if name in ("atax", "covariance", "bfs"):
+                assert restored > 0.85, (name, n, restored)
+
+
+def test_max_achieved_speedup_near_2_3x():
+    """Conclusion: 'up to 2.3× speedups on offloaded applications'."""
+    best = max(
+        simulator.simulate(mk().spec, n, "baseline").total
+        / simulator.simulate(mk().spec, n, "multicast").total
+        for mk in jobs.PAPER_JOBS.values() for n in NS
+    )
+    assert 2.0 < best < 2.7, best
+
+
+def test_axpy_minimum_disappears_with_extensions():
+    """§5.4 / fig. 9: the baseline AXPY runtime has a global minimum in n;
+    the multicast curve decreases monotonically (Amdahl-aligned)."""
+    spec = jobs.axpy_spec(1024)
+    base = [simulator.simulate(spec, n, "baseline").total for n in NS]
+    ext = [simulator.simulate(spec, n, "multicast").total for n in NS]
+    assert min(base) < base[-1], "baseline should have an interior minimum"
+    assert all(b > a for a, b in zip(ext[1:], ext[:-1])), "ext must decrease"
+
+
+def test_wakeup_multicast_constant_47():
+    """§5.5 B: multicast wakeup = 47 cycles for every cluster."""
+    res = simulator.simulate(jobs.axpy_spec(1024), 16, "multicast")
+    stats = res.phase_stats()[simulator.Phase.B]
+    assert stats.min == stats.max == pytest.approx(47.0)
+
+
+def test_wakeup_baseline_linear():
+    """§5.5 B: baseline wakeup min ≈ multicast, max grows linearly."""
+    res = simulator.simulate(jobs.axpy_spec(1024), 32, "baseline")
+    stats = res.phase_stats()[simulator.Phase.B]
+    assert stats.min == pytest.approx(47.0)
+    assert stats.max == pytest.approx(8 + 31 * 25 + 39)
+
+
+def test_phase_e_port_drain():
+    """§5.5 E: with simultaneous starts the max phase-E runtime includes the
+    time to move the entire job input (eq. 1)."""
+    N = 1024
+    res = simulator.simulate(jobs.axpy_spec(N), 8, "multicast")
+    stats = res.phase_stats()[simulator.Phase.E]
+    want = 53 + 55 + 2 * N * 8 / 64
+    assert stats.max == pytest.approx(want, rel=0.02)
+
+
+@given(n=st.sampled_from(NS), N=st.sampled_from([256, 1024, 4096]))
+@settings(max_examples=60, deadline=None)
+def test_modes_order_invariant(n, N):
+    """Property: ideal ≤ multicast ≤ baseline for any (n, N)."""
+    spec = jobs.axpy_spec(N)
+    t = {m: simulator.simulate(spec, n, m).total
+         for m in ("ideal", "multicast", "baseline")}
+    assert t["ideal"] <= t["multicast"] <= t["baseline"]
+
+
+@given(n=st.integers(1, 32))
+@settings(max_examples=40, deadline=None)
+def test_sim_total_positive_and_finite(n):
+    for mk in (jobs.make_axpy, jobs.make_bfs):
+        spec = mk().spec
+        for mode in simulator.MODES:
+            t = simulator.simulate(spec, n, mode).total
+            assert np.isfinite(t) and t > 0
