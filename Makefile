@@ -1,0 +1,19 @@
+PYTHON ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: check test bench-smoke bench-offload
+
+# Tier-1 verify: full test suite + a benchmark smoke (what CI runs).
+check: test bench-smoke
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PYTHON) -m benchmarks.run --only fig07,fig12
+
+# The tracked dispatch-overhead trajectory (writes BENCH_offload.json).
+bench-offload:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PYTHON) -m benchmarks.run --only offload --json BENCH_offload.json

@@ -1,21 +1,31 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig07,fig12,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig07,fig12,...] \\
+        [--json BENCH_offload.json]
 
 Prints ``name,us_per_call,derived`` CSV.  Simulator-backed figures report
 modeled cycles (1 cycle = 1 ns at the paper's 1 GHz testbench); `derived`
 carries each figure's headline statistic next to the paper's published
 value.
+
+``--json PATH`` additionally writes the run as structured JSON — one entry
+per suite with its rows, the derived headline, and (where the suite exposes
+it, e.g. ``offload``) the raw measurement dict — so perf trajectories can be
+tracked across commits as ``BENCH_*.json`` files.
 """
 
 import argparse
+import json
 import sys
+import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig07,fig12")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as structured JSON to PATH")
     args = ap.parse_args()
 
     from benchmarks.kernel_bench import kernel_table
@@ -29,6 +39,7 @@ def main() -> None:
         keep = set(args.only.split(","))
         suites = {k: v for k, v in suites.items() if k in keep}
 
+    report = {"schema": 1, "unix_time": time.time(), "suites": {}}
     print("name,us_per_call,derived")
     failures = 0
     for key, fn in suites.items():
@@ -36,11 +47,25 @@ def main() -> None:
             rows, derived = fn()
         except Exception as e:                              # noqa: BLE001
             print(f"{key}/ERROR,0,{e!r}")
+            report["suites"][key] = {"error": repr(e)}
             failures += 1
             continue
         for name, val, unit in rows:
             print(f"{name},{val:.3f},{unit}")
         print(f"{key}/SUMMARY,0,{derived}")
+        entry = {
+            "rows": [{"name": n, "value": v, "unit": u} for n, v, u in rows],
+            "derived": derived,
+        }
+        raw = getattr(fn, "last_raw", None)
+        if raw:
+            entry["raw"] = raw
+        report["suites"][key] = entry
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -22,9 +22,11 @@ from repro.core.multicast import (
     encode_cluster_selection_multi,
 )
 from repro.core.offload import (
+    DispatchPlan,
     JobHandle,
     OffloadConfig,
     OffloadRuntime,
+    PlanStats,
     count_collectives,
 )
 from repro.core.params import DEFAULT_PARAMS, OccamyParams
@@ -32,8 +34,10 @@ from repro.core.phases import Phase, PhaseStats
 from repro.core.simulator import JobSpec, SimResult, offload_overhead, simulate, speedups
 
 __all__ = [
-    "AddressMap", "CompletionUnit", "DEFAULT_PARAMS", "JobHandle", "JobSpec",
+    "AddressMap", "CompletionUnit", "DEFAULT_PARAMS", "DispatchPlan",
+    "JobHandle", "JobSpec",
     "MulticastRequest", "OccamyParams", "OffloadConfig", "OffloadRuntime",
+    "PlanStats",
     "PAPER_JOBS", "PaperJob", "Phase", "PhaseStats", "SimResult",
     "atax_closed_form_paper", "axpy_closed_form", "count_collectives",
     "decode_cluster_selection", "decode_match", "encode_cluster_selection",

@@ -82,6 +82,7 @@ class CompletionUnit:
         self._regs: List[_UnitRegs] = [_UnitRegs() for _ in range(n_units)]
         self._pending_irq: Optional[int] = None   # job id carried as cause
         self._deferred: List[int] = []            # fired while another pending
+        self._collected: set = set()              # causes drained early
 
     @property
     def n_units(self) -> int:
@@ -123,6 +124,28 @@ class CompletionUnit:
         cause = self._pending_irq
         self._pending_irq = self._deferred.pop(0) if self._deferred else None
         return cause
+
+    def collect(self, job_id: int) -> None:
+        """Drain fired causes until ``job_id``'s completion is observed.
+
+        Handles out-of-order ``wait()`` across multiple outstanding jobs:
+        causes belonging to *other* jobs are parked and satisfy their own
+        later ``collect()`` calls instead of being treated as protocol
+        errors (the host-side analogue of the deferred-interrupt replay in
+        fig. 6).
+        """
+        if job_id in self._collected:
+            self._collected.discard(job_id)
+            return
+        while True:
+            cause = self.clear()
+            if cause is None:
+                raise RuntimeError(
+                    f"completion for job {job_id} never fired "
+                    f"(collected={sorted(self._collected)})")
+            if cause == job_id:
+                return
+            self._collected.add(cause)
 
     def outstanding(self) -> Dict[int, int]:
         """job-id -> arrivals still missing, for every in-flight unit."""

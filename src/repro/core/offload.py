@@ -26,20 +26,54 @@ cover.  The selected clusters become a sub-mesh.
 Completion is tracked host-side by the :class:`~repro.core.completion.
 CompletionUnit` (fig. 6 semantics, multiple outstanding jobs by job ID), fed
 by the device-side arrivals count that every offloaded program returns.
+
+Dispatch fast path
+------------------
+
+The paper's thesis applies to this framework's *own* host-side critical
+path: re-resolving the sub-mesh, re-deriving shardings, and re-``device_put``
+-ing identical operands on every ``offload()`` is exactly the per-job
+overhead §4 sets out to kill.  The runtime therefore caches a
+:class:`DispatchPlan` per (job, cluster selection, operand shapes/dtypes):
+
+* **plan reuse** — the resolved sub-mesh, the ``NamedSharding`` for every
+  operand and for the job args, and the compiled program are computed once
+  and reused; a warm dispatch performs zero sharding/compile work.
+* **resident operands** — ``offload(job, "resident", ...)`` reuses the
+  operand buffers staged by the previous dispatch (or by an explicit
+  ``plan.stage(operands)``), skipping phase-E ``device_put`` entirely.
+  ``plan.invalidate()`` drops residency explicitly; staging fresh operands
+  through a normal ``offload(job, {...})`` call refreshes it implicitly.
+* **job-args cache** — job args are tiny but re-uploaded on every seed-style
+  dispatch; the plan keeps the last staged value and skips the upload when
+  the host value is unchanged (exact ``array_equal`` check).
+* **buffer donation** — ``OffloadConfig.donate_operands=True`` donates the
+  operand buffers to XLA (phase-E buffers can back phase-G outputs).  A
+  donated dispatch consumes the resident buffers; the plan keeps the host
+  references and transparently re-stages on the next dispatch, so donation
+  never corrupts reuse (it only trades residency for memory).
+* **one-fetch completion** — ``JobHandle.wait()`` fetches result and
+  arrivals in a single ``device_get`` and drains completion-unit causes
+  out of order, so outstanding handles (up to the runtime's ``n_units``
+  completion-unit copies, §4.3) can be waited on in any order.
+
+``DispatchPlan.stats`` / ``OffloadRuntime.stats`` count device_puts, plan
+hits/misses, and resident hits — the hooks the fast-path tests and
+``benchmarks/offload_wallclock.py`` assert against.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import multicast as mc
 from repro.core.completion import (
     CompletionUnit,
@@ -49,6 +83,9 @@ from repro.core.completion import (
 from repro.core.jobs import PaperJob
 
 AXIS = "clusters"
+
+#: sentinel accepted by ``offload(job, "resident", ...)``
+RESIDENT = "resident"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +106,17 @@ class OffloadConfig:
 
 
 @dataclasses.dataclass
+class PlanStats:
+    """Host-side dispatch-overhead counters (per plan / per runtime)."""
+
+    device_puts: int = 0          # operand/arg buffers uploaded
+    resident_hits: int = 0        # operands reused without any upload
+    args_hits: int = 0            # job-args upload skipped (unchanged value)
+    dispatches: int = 0           # jobs launched through this plan
+    donation_restages: int = 0    # re-uploads forced by a donated dispatch
+
+
+@dataclasses.dataclass
 class JobHandle:
     """An in-flight offloaded job (async dispatch = multiple outstanding)."""
 
@@ -78,17 +126,156 @@ class JobHandle:
     n_clusters: int
     dispatched_at: float
     runtime: "OffloadRuntime"
+    _data: Any = None
+    _done: bool = False
 
     def wait(self) -> Any:
-        """Block until complete; feeds the completion unit and returns data."""
-        arrivals = int(jax.device_get(self.arrivals))
-        self.runtime.unit.arrive(self.job_id, arrivals)
-        cause = self.runtime.unit.clear()
-        if cause != self.job_id:
+        """Block until complete; feeds the completion unit and returns data.
+
+        One blocking ``device_get`` fetches result and arrivals together,
+        and completion causes are drained out of order through
+        :meth:`CompletionUnit.collect` — handles may be waited on in any
+        order relative to dispatch (the number of *outstanding* jobs is
+        bounded by the runtime's ``n_units``, as in the paper's fig. 6).
+        """
+        if self._done:
+            return self._data
+        data, arrivals = jax.device_get((self.result, self.arrivals))
+        self.runtime.unit.arrive(self.job_id, int(arrivals))
+        self.runtime.unit.collect(self.job_id)
+        self._data, self._done = data, True
+        self.result = self.arrivals = None   # drop device refs
+        return data
+
+
+class DispatchPlan:
+    """Cached dispatch state for one (job, cluster selection, operand shapes).
+
+    Holds everything ``offload()`` would otherwise recompute per job: the
+    sub-mesh, per-operand ``NamedSharding``s, the compiled program, the last
+    staged job-args value, and (optionally) *resident* operand buffers that
+    repeated dispatch reuses without any host->device transfer.
+    """
+
+    def __init__(self, runtime: "OffloadRuntime", job: PaperJob,
+                 devices: Sequence[jax.Device], cluster_ids: Sequence[int],
+                 op_meta: Tuple[Tuple[str, Tuple[int, ...], str], ...],
+                 args_shape: Tuple[int, ...]):
+        self.runtime = runtime
+        self.job = job
+        self.cluster_ids = tuple(cluster_ids)
+        self.n_clusters = len(cluster_ids)
+        self.mesh = Mesh(np.asarray(devices), (AXIS,))
+        self.op_meta = op_meta
+        self.args_shape = tuple(args_shape)
+        self.stats = PlanStats()
+
+        cfg = runtime.config
+        if cfg.info_dist == "multicast":
+            self.args_sharding = NamedSharding(self.mesh, P())
+        else:
+            self.args_sharding = NamedSharding(self.mesh, P(AXIS))
+        self.op_shardings: Dict[str, NamedSharding] = {}
+        for name, shape, _ in op_meta:
+            axis = job.shard_axes[name]
+            spec = P() if axis is None else P(*([None] * axis + [AXIS]))
+            if axis is not None and shape[axis] % self.n_clusters:
+                raise ValueError(
+                    f"operand {name} axis {axis} ({shape[axis]}) "
+                    f"not divisible by {self.n_clusters} clusters"
+                )
+            self.op_shardings[name] = NamedSharding(self.mesh, spec)
+
+        self.fn = runtime._build(
+            job, self.mesh, self.n_clusters,
+            tuple(name for name, _, _ in op_meta), self.args_shape)
+
+        self._resident: Dict[str, Any] = {}       # name -> device buffer
+        self._resident_src: Dict[str, np.ndarray] = {}  # name -> host array
+        self._args_val: Optional[np.ndarray] = None
+        self._args_dev: Any = None
+
+    # -- staging ---------------------------------------------------------------
+
+    @property
+    def has_resident(self) -> bool:
+        return len(self._resident) == len(self.op_meta) > 0 or not self.op_meta
+
+    def stage(self, operands: Dict[str, np.ndarray], *,
+              _caller_owned: bool = True) -> Dict[str, Any]:
+        """Phase-E upload of ``operands``; the buffers become resident."""
+        names = tuple(sorted(operands))
+        if names != tuple(name for name, _, _ in self.op_meta):
+            raise ValueError(
+                f"operand names {names} do not match plan {self.op_meta}")
+        staged = {}
+        donating = self.runtime.config.donate_operands
+        for name, shape, dtype in self.op_meta:
+            arr = np.asarray(operands[name])
+            if tuple(arr.shape) != shape:
+                raise ValueError(
+                    f"operand {name} shape {arr.shape} != planned {shape}")
+            if str(arr.dtype) != dtype:
+                raise ValueError(
+                    f"operand {name} dtype {arr.dtype} != planned {dtype} "
+                    "(a dtype change needs a new plan, not a silent retrace)")
+            staged[name] = jax.device_put(arr, self.op_shardings[name])
+            self.stats.device_puts += 1
+            # donation restages from these refs later — snapshot caller
+            # arrays so in-place mutation cannot skew the redo (restages
+            # from our own snapshots skip the copy)
+            self._resident_src[name] = (
+                arr.copy() if donating and _caller_owned else arr)
+        self._resident = staged
+        return staged
+
+    def invalidate(self, names: Optional[Sequence[str]] = None) -> None:
+        """Drop resident operand buffers (all, or a named subset)."""
+        if names is None:
+            self._resident.clear()
+            self._resident_src.clear()
+        else:
+            for name in names:
+                self._resident.pop(name, None)
+                self._resident_src.pop(name, None)
+
+    def resident_operands(self) -> Dict[str, Any]:
+        """The resident device buffers, re-staging any consumed by donation."""
+        if not self._resident and self._resident_src:
+            # a donated dispatch consumed the buffers; restore from host refs
+            self.stage(dict(self._resident_src), _caller_owned=False)
+            self.stats.donation_restages += len(self.op_meta)
+        if len(self._resident) != len(self.op_meta):
             raise RuntimeError(
-                f"completion-unit cause {cause} != job {self.job_id}"
-            )
-        return jax.device_get(self.result)
+                "no resident operands staged for this plan — dispatch once "
+                "with real operands (or call plan.stage) before "
+                "offload(job, 'resident', ...)")
+        self.stats.resident_hits += len(self.op_meta)
+        return dict(self._resident)
+
+    def stage_args(self, job_args: np.ndarray) -> Any:
+        """Upload job args, skipping the transfer when the value is unchanged."""
+        if (self._args_dev is not None and self._args_val is not None
+                and np.array_equal(self._args_val, job_args)):
+            self.stats.args_hits += 1
+            return self._args_dev
+        if self.runtime.config.info_dist == "multicast":
+            host = job_args
+        else:
+            tiled = np.zeros((self.n_clusters,) + job_args.shape,
+                             job_args.dtype)
+            tiled[0] = job_args
+            host = tiled
+        self._args_dev = jax.device_put(host, self.args_sharding)
+        self.stats.device_puts += 1
+        self._args_val = job_args.copy()
+        return self._args_dev
+
+    def _after_dispatch(self) -> None:
+        self.stats.dispatches += 1
+        if self.runtime.config.donate_operands:
+            # donated buffers are dead; keep host refs so reuse self-heals
+            self._resident.clear()
 
 
 def _chain_distribute(args: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -121,6 +308,21 @@ class OffloadRuntime:
         self.unit = CompletionUnit(n_units=n_units)
         self._job_counter = 0
         self._compiled: Dict[Tuple, Any] = {}
+        self._plans: Dict[Tuple, DispatchPlan] = {}
+        self._retired_stats = PlanStats()   # counts from replaced plans
+        self.plan_hits = 0
+        self.plan_misses = 0
+
+    @property
+    def stats(self) -> PlanStats:
+        """Running dispatch-overhead totals across all plans (monotonic —
+        replaced plans' counts are retained)."""
+        agg = dataclasses.replace(self._retired_stats)
+        for p in self._plans.values():
+            for f in dataclasses.fields(PlanStats):
+                setattr(agg, f.name,
+                        getattr(agg, f.name) + getattr(p.stats, f.name))
+        return agg
 
     # -- cluster selection (paper §4.2 semantics) ---------------------------------
 
@@ -152,61 +354,108 @@ class OffloadRuntime:
             ids = list(range(n))
         return [self.all_devices[i] for i in ids], ids
 
+    # -- planning -------------------------------------------------------------------
+
+    def plan(
+        self,
+        job: PaperJob,
+        operands: Optional[Dict[str, np.ndarray]] = None,
+        n: Optional[int] = None,
+        request: Optional[mc.MulticastRequest] = None,
+        clusters: Optional[Sequence[int]] = None,
+        args_shape: Tuple[int, ...] = (8,),
+    ) -> DispatchPlan:
+        """Resolve (and cache) the dispatch plan for a job/selection pair.
+
+        With ``operands`` given, their shapes/dtypes seed (or validate) the
+        plan; staging is separate (``plan.stage`` / a dict ``offload``).
+        Without operands, the plan must already exist (from a prior dispatch
+        or ``plan()`` call) and is returned as-is.
+        """
+        devices, ids = self.select_clusters(
+            n=n if (request is None and clusters is None) else None,
+            request=request, clusters=clusters,
+        )
+        key = (job.spec.name, tuple(ids), tuple(args_shape))
+        if operands is None:
+            plan = self._plans.get(key)
+            if plan is None:
+                raise KeyError(
+                    f"no dispatch plan for {key}; pass operands once first")
+            self.plan_hits += 1
+            return plan
+
+        op_meta = tuple(
+            (name, tuple(np.asarray(operands[name]).shape),
+             str(np.asarray(operands[name]).dtype))
+            for name in sorted(operands)
+        )
+        plan = self._plans.get(key)
+        if plan is not None and plan.op_meta == op_meta:
+            self.plan_hits += 1
+            return plan
+        self.plan_misses += 1
+        new_plan = DispatchPlan(self, job, devices, ids, op_meta,
+                                tuple(args_shape))
+        if plan is not None:   # replaced: keep its counts (after the build
+            # succeeded, so a failing build leaves the old plan untouched)
+            for f in dataclasses.fields(PlanStats):
+                setattr(self._retired_stats, f.name,
+                        getattr(self._retired_stats, f.name)
+                        + getattr(plan.stats, f.name))
+        self._plans[key] = new_plan
+        return new_plan
+
     # -- dispatch -------------------------------------------------------------------
 
     def offload(
         self,
         job: PaperJob,
-        operands: Dict[str, np.ndarray],
+        operands: Union[Dict[str, np.ndarray], str],
         job_args: Optional[np.ndarray] = None,
         n: Optional[int] = None,
         request: Optional[mc.MulticastRequest] = None,
         clusters: Optional[Sequence[int]] = None,
     ) -> JobHandle:
-        """Phase A..I, as one jitted program on the selected sub-mesh."""
-        devices, ids = self.select_clusters(
-            n=n if (request is None and clusters is None) else None,
-            request=request,
-            clusters=clusters,
-        )
-        n_sel = len(devices)
-        mesh = Mesh(np.asarray(devices), (AXIS,))
-        job_id = self._job_counter
-        self._job_counter += 1
+        """Phase A..I, as one jitted program on the selected sub-mesh.
 
+        ``operands`` is either the host operand dict (phase-E staged on this
+        call, and left resident on the plan) or the string ``"resident"`` to
+        reuse the buffers staged by the previous dispatch of the same plan —
+        the zero-``device_put`` warm path.
+        """
         if job_args is None:
             job_args = np.ones((8,), dtype=np.float64)
         job_args = np.asarray(job_args, dtype=np.float64)
 
-        fn = self._build(job, mesh, n_sel, tuple(sorted(operands)), job_args.shape)
+        resident = isinstance(operands, str)
+        if resident and operands != RESIDENT:
+            raise ValueError(f"unknown operands mode {operands!r}")
+        plan = self.plan(
+            job, operands=None if resident else operands,
+            n=n, request=request, clusters=clusters,
+            args_shape=job_args.shape,
+        )
 
-        # Phase A / job-info placement: multicast replicates (one broadcast);
-        # baseline materializes on cluster 0 only and the program chains it.
-        if self.config.info_dist == "multicast":
-            args_sharding = NamedSharding(mesh, P())
-            args_dev = jax.device_put(job_args, args_sharding)
+        job_id = self._job_counter
+        self._job_counter += 1
+
+        # Phase A / job-info placement (multicast replicates, baseline
+        # materializes on cluster 0) — skipped when the value is unchanged.
+        args_dev = plan.stage_args(job_args)
+
+        # Phase E staging: resident mode reuses the prior buffers outright.
+        if resident:
+            op_dev = plan.resident_operands()
         else:
-            tiled = np.zeros((n_sel,) + job_args.shape, job_args.dtype)
-            tiled[0] = job_args
-            args_dev = jax.device_put(tiled, NamedSharding(mesh, P(AXIS)))
+            op_dev = plan.stage(operands)
 
-        # Phase E staging: operands enter via their job sharding (chunked or
-        # replicated), the wide-path data movement the paper does NOT multicast.
-        op_dev = {}
-        for name in sorted(operands):
-            axis = job.shard_axes[name]
-            spec = P() if axis is None else P(*([None] * axis + [AXIS]))
-            arr = np.asarray(operands[name])
-            if axis is not None and arr.shape[axis] % n_sel:
-                raise ValueError(
-                    f"operand {name} axis {axis} ({arr.shape[axis]}) "
-                    f"not divisible by {n_sel} clusters"
-                )
-            op_dev[name] = jax.device_put(arr, NamedSharding(mesh, spec))
-
-        self.unit.program(n_sel, job_id)
-        result, arrivals = fn(args_dev, *(op_dev[k] for k in sorted(op_dev)))
-        return JobHandle(job_id, result, arrivals, n_sel, time.monotonic(), self)
+        self.unit.program(plan.n_clusters, job_id)
+        result, arrivals = plan.fn(
+            args_dev, *(op_dev[name] for name, _, _ in plan.op_meta))
+        plan._after_dispatch()
+        return JobHandle(job_id, result, arrivals, plan.n_clusters,
+                         time.monotonic(), self)
 
     def run(self, job: PaperJob, seed: int = 0, **sel) -> Tuple[Any, Any]:
         """Convenience: build an instance, offload it, return (got, expected)."""
@@ -264,11 +513,13 @@ class OffloadRuntime:
                 arrivals = central_counter_arrivals(done, AXIS, n)
             return out, arrivals
 
+        donate = tuple(range(1, 1 + len(op_names))) if cfg.donate_operands else ()
         fn = jax.jit(
-            jax.shard_map(
-                program, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs,
-                check_vma=False,
-            )
+            shard_map(
+                program, mesh=mesh, in_specs=tuple(in_specs),
+                out_specs=out_specs,
+            ),
+            donate_argnums=donate,
         )
         self._compiled[key] = fn
         return fn

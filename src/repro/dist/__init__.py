@@ -1,0 +1,9 @@
+"""Distribution layer: sharding rules shared by train / serve / dry-run."""
+
+from repro.dist.sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    param_specs,
+    to_shardings,
+)

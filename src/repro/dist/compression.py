@@ -1,0 +1,81 @@
+"""Gradient compression for data-parallel reductions.
+
+Int8 linear quantization with per-call scale, an error-feedback residual
+(1-bit-Adam style: what quantization drops this step is carried and added
+back next step, so the *accumulated* compressed sum tracks the true sum),
+and the two collective helpers built on them:
+
+* ``compressed_psum``     — quantize locally, all-reduce the dequantized
+  values (models the wire carrying int8 payloads + one fp32 scale).
+* ``dp_grads_compressed`` — per-shard ``value_and_grad`` whose gradient
+  all-reduce goes through ``compressed_psum`` (mean over the axis), for use
+  inside ``shard_map`` data-parallel training.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (int8 codes, fp32 scale); round-to-nearest, |err| <= scale/2."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_residual(tree: Pytree) -> Pytree:
+    """Zero error-feedback residual matching a gradient pytree."""
+    return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tree)
+
+
+def error_feedback_compress(grads: Pytree, residual: Pytree
+                            ) -> Tuple[Pytree, Pytree]:
+    """-> (dequantized compressed grads, updated residual).
+
+    Compresses ``grads + residual``; the new residual is exactly the
+    quantization error, so successive compressed steps sum to the true sum
+    up to one quantization step.
+    """
+    def one(g, r):
+        y = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(y)
+        dq = dequantize_int8(q, scale)
+        return dq, y - dq
+
+    pairs = jax.tree.map(one, grads, residual)
+    dq, res = jax.tree.transpose(
+        jax.tree.structure(grads), jax.tree.structure((0, 0)), pairs)
+    return dq, res
+
+
+def compressed_psum(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """All-reduce of locally int8-quantized values (inside ``shard_map``)."""
+    q, scale = quantize_int8(x)
+    return jax.lax.psum(dequantize_int8(q, scale), axis)
+
+
+def dp_grads_compressed(loss_fn: Callable[..., jnp.ndarray], axis: str
+                        ) -> Callable[..., Tuple[jnp.ndarray, Pytree]]:
+    """Data-parallel grads with a compressed all-reduce.
+
+    ``loss_fn(w, batch)`` is evaluated on the local shard; the returned
+    function (for use inside ``shard_map``) all-reduces gradients through
+    ``compressed_psum`` and averages, and p-means the loss.
+    """
+    def gfn(w: Pytree, batch: Dict[str, jnp.ndarray]):
+        loss, g = jax.value_and_grad(loss_fn)(w, batch)
+        n = jax.lax.psum(jnp.float32(1.0), axis)
+        g = jax.tree.map(lambda t: compressed_psum(t, axis) / n, g)
+        return jax.lax.pmean(loss, axis), g
+
+    return gfn

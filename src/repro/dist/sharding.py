@@ -1,0 +1,113 @@
+"""Sharding rules: one place that maps pytrees onto the mesh.
+
+Every launcher-side builder (train step, serve step, dry-run cells) derives
+its explicit in/out shardings from the three rule functions here, so that
+the same program partitioning is used whether a cell is AOT-compiled for the
+dry-run or actually executed on the CPU test mesh:
+
+* ``param_specs``  — tensor parallelism: shard the widest divisible trailing
+  axis of every >=2-D parameter over the ``model`` axis (layer-stacked
+  parameters keep their leading ``L`` axis replicated); 1-D scales/biases
+  replicate.
+* ``batch_specs``  — data parallelism: shard the leading batch axis over the
+  data axes (``pod`` composes into ``data`` on multi-pod meshes).
+* ``cache_specs``  — KV/state caches are laid out ``(L, B, ...)``; the batch
+  axis (axis 1) shards over the data axes, everything else replicates.
+  The scalar ``pos`` counter replicates.
+
+All rules are divisibility-guarded: an axis that does not divide evenly over
+its mesh axes falls back to replication instead of erroring, so reduced test
+configs and odd meshes always produce a valid (if less parallel) layout.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+#: mesh axes that compose into data parallelism, outermost first
+DP_AXES: Tuple[str, ...] = ("pod", "data")
+#: the tensor-parallel mesh axis
+TP_AXIS = "model"
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axis names present on this mesh, outermost first."""
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _dp_size(mesh: Mesh) -> int:
+    sizes = _axis_sizes(mesh)
+    n = 1
+    for a in dp_axes(mesh):
+        n *= sizes[a]
+    return n
+
+
+def _shape(leaf: Any) -> Tuple[int, ...]:
+    return tuple(leaf.shape)
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def param_specs(params: Pytree, mesh: Mesh) -> Pytree:
+    """PartitionSpec per parameter: widest divisible trailing axis -> model."""
+    sizes = _axis_sizes(mesh)
+    tp = sizes.get(TP_AXIS, 1)
+
+    def rule(leaf):
+        shape = _shape(leaf)
+        if tp <= 1 or len(shape) < 2:
+            return P()
+        # trailing axes first: (L, d_in, d_out) prefers the output dim, which
+        # keeps matmul outputs model-sharded (Megatron-style column parallel)
+        for ax in range(len(shape) - 1, 0, -1):
+            if shape[ax] % tp == 0 and shape[ax] >= tp:
+                return P(*([None] * ax + [TP_AXIS]))
+        return P()
+
+    return jax.tree.map(rule, params)
+
+
+def batch_specs(shapes: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """PartitionSpec per model input: leading batch axis -> data axes."""
+    dp = dp_axes(mesh)
+    dpn = _dp_size(mesh)
+
+    def rule(leaf):
+        shape = _shape(leaf)
+        if not dp or dpn <= 1 or not shape or shape[0] % dpn:
+            return P()
+        return P(dp)
+
+    return jax.tree.map(rule, shapes)
+
+
+def cache_specs(cache_shapes: Pytree, mesh: Mesh) -> Pytree:
+    """PartitionSpec per cache entry: (L, B, ...) batch axis -> data axes."""
+    dp = dp_axes(mesh)
+    dpn = _dp_size(mesh)
+
+    def rule(leaf):
+        shape = _shape(leaf)
+        if not dp or dpn <= 1 or len(shape) < 2 or shape[1] % dpn:
+            return P()
+        return P(None, dp)
+
+    return jax.tree.map(rule, cache_shapes)
+
+
+def to_shardings(specs: Pytree, mesh: Mesh) -> Pytree:
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=_is_spec)

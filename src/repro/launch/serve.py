@@ -30,6 +30,12 @@ def main() -> None:
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-mode", default="step",
+                    choices=["step", "chunk", "host"],
+                    help="decode loop: device-resident step, lax.scan chunk, "
+                         "or the legacy host round-trip")
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="tokens per dispatch in chunk mode")
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -44,7 +50,9 @@ def main() -> None:
 
     scfg = ServeConfig(batch=args.batch,
                        max_len=args.prompt_len + args.new_tokens + 1,
-                       temperature=args.temperature, seed=args.seed)
+                       temperature=args.temperature, seed=args.seed,
+                       decode_mode=args.decode_mode,
+                       decode_chunk=args.decode_chunk)
     engine = ServeEngine(cfg, params, mesh, scfg)
 
     stream = SyntheticStream(

@@ -5,12 +5,32 @@ dry-run's ``serve_step``) with explicit cache shardings; ``ServeEngine``
 drives it host-side with batched requests, async dispatch (multiple
 outstanding steps — the paper's multiple-outstanding-jobs pattern, §4.3),
 and completion tracking through the CompletionUnit.
+
+Decode fast path (the framework's own offload-overhead fix): the seed
+engine's loop was a per-token host round-trip — fetch logits, sample on the
+host, ``device_put`` the sampled token back.  That is exactly the phase-A/E
+per-job tax the paper kills, so the engine now keeps the token resident:
+
+* ``decode_mode="step"`` (default) — sampling (greedy and temperature, with
+  the per-step ``fold_in``) runs *inside* the jitted step; the token and the
+  PRNG key never leave the device between steps.  Zero host->device
+  transfers per decoded token.
+* ``decode_mode="chunk"`` — a ``jax.lax.scan`` over ``decode_chunk`` steps
+  amortizes dispatch to **one** XLA launch per chunk; the CompletionUnit
+  accounts one job per chunk (the paper's job granularity knob).  A
+  trailing remainder shorter than the chunk runs through the single-step
+  program, so only two programs are ever compiled.
+* ``decode_mode="host"`` — the seed's host-round-trip loop, kept as the
+  measurable "before" for ``benchmarks/offload_wallclock.py``.
+
+``ServeEngine.stats`` counts per-token host->device transfers and XLA
+dispatches so tests and benchmarks can assert the fast-path properties.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +47,8 @@ from repro.models.model import (
 Pytree = Any
 
 
-def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
-                     call: CallConfig = CallConfig(moe_no_drop=True)):
-    """-> (jitted decode step, cache shardings).  tokens: (B, 1) -> logits."""
+def _serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    """-> (param specs, cache specs, token NamedSharding)."""
     cache_shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
     cspecs = cache_specs(cache_shapes, mesh)
     key_spec = jax.eval_shape(lambda: jax.random.key(0))
@@ -37,14 +56,23 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
         lambda k: init_params(k, cfg),
         jax.ShapeDtypeStruct(key_spec.shape, key_spec.dtype))
     pspecs = param_specs(pshapes, mesh)
-
-    def step(params, cache, tokens):
-        return decode_step(params, cfg, cache, tokens, call)
-
     tok_sharding = NamedSharding(
         mesh, batch_specs(
             {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}, mesh
         )["tokens"])
+    return pspecs, cspecs, tok_sharding
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                     call: CallConfig = CallConfig(moe_no_drop=True),
+                     shardings=None):
+    """-> (jitted decode step, cache shardings).  tokens: (B, 1) -> logits."""
+    pspecs, cspecs, tok_sharding = (
+        shardings or _serve_shardings(cfg, mesh, batch, max_len))
+
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens, call)
+
     jitted = jax.jit(
         step,
         in_shardings=(
@@ -61,12 +89,114 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
     return jitted, cspecs, pspecs
 
 
+def _sampler(temperature: float):
+    """(logits (B, V), key) -> (B,) int32, traced inside the jitted step."""
+    def sample(logits, key):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)
+    return sample
+
+
+def _decode_sample_body(cfg: ModelConfig, temperature: float,
+                        call: CallConfig):
+    """The one decode+sample step both resident builders share: decode a
+    (B, 1) token, fold the key with the step index, sample the next token.
+    Sharing this body is what keeps the single-step and chunk programs on
+    the identical key trajectory."""
+    sample = _sampler(temperature)
+
+    def body(params, cache, tok, key, i):
+        logits, cache = decode_step(params, cfg, cache, tok, call)
+        lg = logits[:, 0] if logits.ndim == 3 else logits
+        key = jax.random.fold_in(key, i)
+        return sample(lg, key), key, cache
+
+    return body
+
+
+def build_sampling_step(cfg: ModelConfig, mesh: Mesh, batch: int,
+                        max_len: int, temperature: float,
+                        call: CallConfig = CallConfig(moe_no_drop=True),
+                        shardings=None):
+    """Device-resident decode+sample: one jitted program per token.
+
+    (params, cache, tok (B,1), key, idx) ->
+        (next tok (B,1), key', idx+1, cache').
+    The per-step ``fold_in(key, idx)`` happens inside the program; nothing
+    crosses the host boundary between steps.
+    """
+    pspecs, cspecs, tok_sharding = (
+        shardings or _serve_shardings(cfg, mesh, batch, max_len))
+    body = _decode_sample_body(cfg, temperature, call)
+    repl = NamedSharding(mesh, P())
+
+    def step(params, cache, tok, key, idx):
+        nxt, key, cache = body(params, cache, tok, key, idx)
+        return nxt[:, None], key, idx + 1, cache
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            to_shardings(pspecs, mesh), to_shardings(cspecs, mesh),
+            tok_sharding, repl, repl,
+        ),
+        out_shardings=(tok_sharding, repl, repl, to_shardings(cspecs, mesh)),
+        donate_argnums=(1,),
+    )
+    return jitted, cspecs, tok_sharding
+
+
+def build_decode_chunk(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                       temperature: float, chunk: int,
+                       call: CallConfig = CallConfig(moe_no_drop=True),
+                       shardings=None):
+    """``lax.scan`` multi-token decode: ``chunk`` tokens per XLA dispatch.
+
+    (params, cache, tok (B,1), key, idx0) ->
+        (toks (B, chunk), tok', key', idx0+chunk, cache').
+    Step i of the scan folds the key with ``idx0 + i`` — identical key
+    trajectory to the single-step program (both run the shared
+    ``_decode_sample_body``), so mixing chunked and single-step dispatch
+    (e.g. for a remainder) is sampling-equivalent.
+    """
+    pspecs, cspecs, tok_sharding = (
+        shardings or _serve_shardings(cfg, mesh, batch, max_len))
+    step_body = _decode_sample_body(cfg, temperature, call)
+    repl = NamedSharding(mesh, P())
+
+    def chunk_fn(params, cache, tok, key, idx0):
+        def body(carry, i):
+            tok, key, cache = carry
+            nxt, key, cache = step_body(params, cache, tok, key, i)
+            return (nxt[:, None], key, cache), nxt
+
+        (tok, key, cache), toks = jax.lax.scan(
+            body, (tok, key, cache), idx0 + jnp.arange(chunk))
+        return toks.T, tok, key, idx0 + chunk, cache    # toks: (B, chunk)
+
+    jitted = jax.jit(
+        chunk_fn,
+        in_shardings=(
+            to_shardings(pspecs, mesh), to_shardings(cspecs, mesh),
+            tok_sharding, repl, repl,
+        ),
+        out_shardings=(repl, tok_sharding, repl, repl,
+                       to_shardings(cspecs, mesh)),
+        donate_argnums=(1,),
+    )
+    return jitted, cspecs, tok_sharding
+
+
 @dataclasses.dataclass
 class ServeConfig:
     batch: int = 8
     max_len: int = 256
     temperature: float = 0.0         # 0 = greedy
     seed: int = 0
+    decode_mode: str = "step"        # "step" | "chunk" | "host" (legacy)
+    decode_chunk: int = 8            # tokens per dispatch in "chunk" mode
 
 
 class ServeEngine:
@@ -77,10 +207,38 @@ class ServeEngine:
         self.cfg, self.scfg, self.call = cfg, scfg, call
         self.mesh = mesh
         self.params = params
+        # one _serve_shardings resolution shared by every program builder
+        self._shardings = _serve_shardings(cfg, mesh, scfg.batch, scfg.max_len)
+        self._tok_sharding = self._shardings[2]
         self.step_fn, self.cspecs, _ = build_serve_step(
-            cfg, mesh, scfg.batch, scfg.max_len, call)
+            cfg, mesh, scfg.batch, scfg.max_len, call,
+            shardings=self._shardings)
         self.unit = CompletionUnit(n_units=8)
         self._jobid = 0
+        self._sampled_step = None      # built lazily per decode mode
+        self._chunk_fn = None
+        self._first_fn = None
+        self.stats = {"h2d_token_puts": 0, "xla_dispatches": 0,
+                      "tokens_emitted": 0}
+
+    # -- program cache -----------------------------------------------------------
+
+    def _get_sampled_step(self):
+        if self._sampled_step is None:
+            self._sampled_step, _, _ = build_sampling_step(
+                self.cfg, self.mesh, self.scfg.batch, self.scfg.max_len,
+                self.scfg.temperature, self.call, shardings=self._shardings)
+        return self._sampled_step
+
+    def _get_chunk_fn(self):
+        if self._chunk_fn is None:
+            self._chunk_fn, _, _ = build_decode_chunk(
+                self.cfg, self.mesh, self.scfg.batch, self.scfg.max_len,
+                self.scfg.temperature, self.scfg.decode_chunk, self.call,
+                shardings=self._shardings)
+        return self._chunk_fn
+
+    # -- generation ---------------------------------------------------------------
 
     def generate(self, prompts: np.ndarray, n_new: int,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None
@@ -97,28 +255,79 @@ class ServeEngine:
         # step's cache sharding (phase-E staging, in offload terms)
         cache = jax.device_put(cache, to_shardings(self.cspecs, self.mesh))
         key = jax.random.key(self.scfg.seed)
-        from jax.sharding import NamedSharding
-        from repro.dist.sharding import batch_specs as _bs
-        tok_sh = NamedSharding(self.mesh, _bs(
-            {"t": jax.ShapeDtypeStruct((self.scfg.batch, 1), jnp.int32)},
-            self.mesh)["t"])
+        mode = self.scfg.decode_mode
+        if mode not in ("host", "step", "chunk"):
+            raise ValueError(f"decode_mode {mode!r} not in host/step/chunk")
+        if mode == "host":
+            return self._generate_host_loop(logits, cache, key, n_new)
+        return self._generate_resident(logits, cache, key, n_new)
+
+    def _generate_resident(self, logits, cache, key, n_new: int) -> np.ndarray:
+        """Device-resident decode: the token never visits the host."""
+        if self._first_fn is None:
+            sample = _sampler(self.scfg.temperature)
+            self._first_fn = jax.jit(lambda lg, k: sample(lg, k)[:, None],
+                                     out_shardings=self._tok_sharding)
+        tok = self._first_fn(logits[:, -1], key)
+        # the prefill-token sample is a real XLA launch emitting token 0
+        # (host mode samples it eagerly inside its first loop iteration)
+        self.stats["xla_dispatches"] += 1
+        self.stats["tokens_emitted"] += 1
+        idx = jnp.int32(0)         # fold index, carried on device thereafter
+        toks = [tok]
+        steps = n_new - 1
+        done = 0
+        use_chunk = (self.scfg.decode_mode == "chunk"
+                     and self.scfg.decode_chunk > 1)
+        if use_chunk:
+            chunk_fn = self._get_chunk_fn()
+            c = self.scfg.decode_chunk
+            while steps - done >= c:
+                job = self._dispatch_begin()
+                ys, tok, key, idx, cache = chunk_fn(
+                    self.params, cache, tok, key, idx)
+                self._dispatch_end(job, tokens=c)
+                toks.append(ys)
+                done += c
+        if done < steps:
+            step_fn = self._get_sampled_step()
+            while done < steps:
+                job = self._dispatch_begin()
+                tok, key, idx, cache = step_fn(
+                    self.params, cache, tok, key, idx)
+                self._dispatch_end(job, tokens=1)
+                toks.append(tok)
+                done += 1
+        out = np.concatenate([np.asarray(t) for t in toks], axis=1)
+        assert out.shape[1] == n_new, (out.shape, n_new)
+        return out
+
+    def _generate_host_loop(self, logits, cache, key, n_new: int) -> np.ndarray:
+        """The seed path: host-side sampling + per-step token device_put."""
+        sample = _sampler(self.scfg.temperature)
         out = []
-        tok = self._sample(logits[:, -1], key)
+        tok = sample(logits[:, -1], key)
         for i in range(n_new):
             out.append(tok)
-            job = self._jobid
-            self._jobid += 1
-            self.unit.program(1, job)
-            tok_dev = jax.device_put(tok[:, None], tok_sh)
+            job = self._dispatch_begin()
+            tok_dev = jax.device_put(tok[:, None], self._tok_sharding)
+            self.stats["h2d_token_puts"] += 1
             logits, cache = self.step_fn(self.params, cache, tok_dev)
             key = jax.random.fold_in(key, i)
-            tok = self._sample(logits[:, 0] if logits.ndim == 3 else logits, key)
-            self.unit.arrive(job, 1)   # step's fused arrival reduction
-            assert self.unit.clear() == job
+            tok = sample(logits[:, 0] if logits.ndim == 3 else logits, key)
+            self._dispatch_end(job, tokens=1)
         return np.stack([np.asarray(t) for t in out], axis=1)
 
-    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
-        if self.scfg.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+    # -- completion accounting (one offloaded job per dispatch) -------------------
+
+    def _dispatch_begin(self) -> int:
+        job = self._jobid
+        self._jobid += 1
+        self.unit.program(1, job)
+        return job
+
+    def _dispatch_end(self, job: int, tokens: int) -> None:
+        self.unit.arrive(job, 1)   # the step's fused arrival reduction
+        self.unit.collect(job)
+        self.stats["xla_dispatches"] += 1
+        self.stats["tokens_emitted"] += tokens

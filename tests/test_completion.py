@@ -1,7 +1,7 @@
 """CompletionUnit register semantics (paper fig. 6) + property tests."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.completion import CompletionUnit
 

@@ -1,7 +1,7 @@
 """Property tests for the paper's address-mask multicast encoding (§4.2)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import multicast as mc
 

@@ -1,0 +1,149 @@
+"""The dispatch fast path: plan caching, resident operands, donation,
+job-args caching, and out-of-order completion (subprocess, 8-device mesh)."""
+
+
+def test_warm_plan_zero_recompiles_and_zero_device_puts(subproc):
+    """A warm resident dispatch does no compilation and no host->device
+    operand transfer; results are bit-for-bit identical to fresh staging."""
+    subproc("""
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime
+
+rt = OffloadRuntime()
+job = jobs.make_axpy(2048)
+operands, expected = job.make_instance(3)
+
+r_fresh = rt.offload(job, operands, n=8).wait()
+compiled_after_first = len(rt._compiled)
+plans_after_first = rt.plan_misses
+puts_after_first = rt.stats.device_puts
+
+for _ in range(3):
+    r_res = rt.offload(job, "resident", n=8).wait()
+    assert np.array_equal(r_fresh, r_res)            # bit-for-bit
+
+assert len(rt._compiled) == compiled_after_first     # zero recompiles
+assert rt.plan_misses == plans_after_first           # zero plan rebuilds
+assert rt.stats.device_puts == puts_after_first      # zero uploads
+assert rt.stats.resident_hits == 3 * 2               # 2 operands x 3 jobs
+assert np.allclose(r_fresh, expected)
+print("OK")
+""")
+
+
+def test_resident_matches_fresh_across_jobs(subproc):
+    """Resident results == fresh-staging results for every paper kernel."""
+    subproc("""
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime
+
+rt = OffloadRuntime()
+for name, mk in jobs.PAPER_JOBS.items():
+    job = mk() if name != "bfs" else mk(64)
+    operands, expected = job.make_instance(2)
+    fresh = rt.offload(job, operands, n=4).wait()
+    res = rt.offload(job, "resident", n=4).wait()
+    assert np.array_equal(fresh, res), name
+    assert np.allclose(fresh, expected, rtol=1e-9, atol=1e-9), name
+print("OK")
+""")
+
+
+def test_donation_does_not_corrupt_reuse(subproc):
+    """donate_operands consumes resident buffers; the plan re-stages from
+    host refs so repeated resident dispatch stays correct."""
+    subproc("""
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime, OffloadConfig
+
+rt = OffloadRuntime(config=OffloadConfig(donate_operands=True))
+job = jobs.make_axpy(1024)
+operands, expected = job.make_instance(1)
+r0 = rt.offload(job, operands, n=8).wait()
+r1 = rt.offload(job, "resident", n=8).wait()
+r2 = rt.offload(job, "resident", n=8).wait()
+assert np.array_equal(r0, r1) and np.array_equal(r1, r2)
+assert np.allclose(r0, expected)
+assert rt.stats.donation_restages == 2 * 2   # 2 operands x 2 resident jobs
+# and still zero recompiles across all of it
+assert len(rt._compiled) == 1
+print("OK")
+""")
+
+
+def test_out_of_order_wait_three_outstanding(subproc):
+    """>=3 outstanding jobs waited on in reverse order all resolve."""
+    subproc("""
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime
+
+rt = OffloadRuntime()
+js = [jobs.make_axpy(256), jobs.make_matmul(), jobs.make_axpy(128)]
+insts = [j.make_instance(i) for i, j in enumerate(js)]
+hs = [rt.offload(j, ops, n=nsel)
+      for (j, (ops, _), nsel) in zip(js, insts, (4, 2, 8))]
+assert set(rt.unit.outstanding()) == {0, 1, 2}
+results = [hs[2].wait(), hs[0].wait(), hs[1].wait()]
+for h, (_, exp) in zip(hs, insts):
+    assert np.allclose(h.wait(), exp)        # wait() is idempotent
+assert rt.unit.outstanding() == {}
+print("OK")
+""")
+
+
+def test_job_args_cache_and_invalidation(subproc):
+    """Unchanged job args skip the upload; changed args and invalidated
+    operands re-stage (and change the result, proving they were applied)."""
+    subproc("""
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime
+
+rt = OffloadRuntime()
+job = jobs.make_axpy(512)
+operands, expected = job.make_instance(0)
+rt.offload(job, operands, n=8).wait()
+rt.offload(job, "resident", n=8).wait()
+assert rt.stats.args_hits == 1               # same default args -> skipped
+
+# changed args re-upload and scale the result (the job-info path is live)
+r2 = rt.offload(job, "resident", job_args=np.full((8,), 2.0), n=8).wait()
+assert np.allclose(r2, 2.0 * expected)
+
+# explicit invalidation forces an error until re-staged
+plan = rt.plan(job, operands, n=8)
+plan.invalidate()
+try:
+    rt.offload(job, "resident", n=8)
+    raise SystemExit("expected RuntimeError after invalidate()")
+except RuntimeError:
+    pass
+r3 = rt.offload(job, operands, n=8).wait()
+assert np.allclose(r3, expected)
+print("OK")
+""")
+
+
+def test_plan_api_direct_staging(subproc):
+    """plan() + plan.stage() primes residency without a dispatch."""
+    subproc("""
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime
+
+rt = OffloadRuntime()
+job = jobs.make_axpy(512)
+operands, expected = job.make_instance(4)
+plan = rt.plan(job, operands, n=4)
+assert not plan.has_resident                 # plan() only resolves/caches
+plan.stage(operands)
+assert plan.has_resident
+got = rt.offload(job, "resident", n=4).wait()
+assert np.allclose(got, expected)
+assert rt.plan(job, n=4) is plan             # cached lookup, no operands
+print("OK")
+""")

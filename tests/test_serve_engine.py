@@ -56,3 +56,71 @@ for _ in range(6):
 np.testing.assert_array_equal(got, np.stack(want, 1))
 print("OK")
 """, devices=8, x64=False, timeout=900)
+
+
+def test_decode_modes_agree_and_stay_device_resident(subproc):
+    """host / step / chunk modes emit identical greedy tokens; the resident
+    modes do zero per-step host->device token transfers and the chunk mode
+    amortizes dispatch to one XLA launch per chunk."""
+    subproc("""
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro import models as M
+from repro.dist.sharding import param_specs, to_shardings
+from repro.serve import ServeConfig, ServeEngine
+
+cfg = M.reduced(M.get("smollm-360m"))
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+params = M.init_params(jax.random.key(0), cfg)
+params = jax.device_put(params, to_shardings(param_specs(params, mesh), mesh))
+prompts = np.random.default_rng(7).integers(0, cfg.vocab_size, (4, 9)).astype(np.int32)
+
+outs, engines = {}, {}
+for mode in ("host", "step", "chunk"):
+    eng = ServeEngine(cfg, params, mesh,
+                      ServeConfig(batch=4, max_len=40, decode_mode=mode,
+                                  decode_chunk=3))
+    outs[mode] = eng.generate(prompts, 8)
+    engines[mode] = eng
+np.testing.assert_array_equal(outs["host"], outs["step"])
+np.testing.assert_array_equal(outs["step"], outs["chunk"])
+assert engines["host"].stats["h2d_token_puts"] == 8
+assert engines["step"].stats["h2d_token_puts"] == 0
+assert engines["chunk"].stats["h2d_token_puts"] == 0
+# first-token sample + 7 decode steps -> 1 + (2 chunks of 3 + 1 remainder)
+assert engines["chunk"].stats["xla_dispatches"] == 4
+assert engines["step"].stats["xla_dispatches"] == 8
+assert all(e.stats["tokens_emitted"] == 8 for e in engines.values())
+print("OK")
+""", devices=8, x64=False, timeout=900)
+
+
+def test_temperature_sampling_device_resident(subproc):
+    """Temperature sampling inside the jitted step: step and chunk modes
+    follow the same key trajectory, and repeated runs are reproducible."""
+    subproc("""
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro import models as M
+from repro.dist.sharding import param_specs, to_shardings
+from repro.serve import ServeConfig, ServeEngine
+
+cfg = M.reduced(M.get("smollm-360m"))
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+params = M.init_params(jax.random.key(0), cfg)
+params = jax.device_put(params, to_shardings(param_specs(params, mesh), mesh))
+prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (4, 6)).astype(np.int32)
+
+outs = {}
+for mode in ("step", "chunk"):
+    eng = ServeEngine(cfg, params, mesh,
+                      ServeConfig(batch=4, max_len=32, temperature=0.7,
+                                  decode_mode=mode, decode_chunk=4))
+    a = eng.generate(prompts, 9)
+    b = eng.generate(prompts, 9)
+    np.testing.assert_array_equal(a, b)       # fixed seed => reproducible
+    outs[mode] = a
+np.testing.assert_array_equal(outs["step"], outs["chunk"])
+assert (outs["step"] >= 0).all() and (outs["step"] < cfg.vocab_size).all()
+print("OK")
+""", devices=8, x64=False, timeout=900)

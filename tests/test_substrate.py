@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.dist.compression import (
     dequantize_int8, error_feedback_compress, init_residual, quantize_int8,
@@ -109,11 +109,12 @@ def test_compressed_psum_on_mesh(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 from repro.dist.compression import compressed_psum
 mesh = Mesh(np.array(jax.devices()), ("data",))
 def f(x):
     return compressed_psum(x, "data")
-fs = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+fs = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
 x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)), jnp.float32)
 got = fs(x)
 want = x.sum(axis=0, keepdims=True)
@@ -127,6 +128,7 @@ def test_dp_grads_compressed_close_to_exact(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 from repro.dist.compression import dp_grads_compressed
 mesh = Mesh(np.array(jax.devices()), ("data",))
 def loss(w, batch):
@@ -138,9 +140,9 @@ w = jnp.asarray(rng.standard_normal((16, 1)), jnp.float32)
 batch = {"x": jnp.asarray(rng.standard_normal((32, 16)), jnp.float32),
          "y": jnp.asarray(rng.standard_normal((32, 1)), jnp.float32)}
 gfn = dp_grads_compressed(loss, axis="data")
-gs = jax.jit(jax.shard_map(gfn, mesh=mesh,
+gs = jax.jit(shard_map(gfn, mesh=mesh,
     in_specs=(P(), {"x": P("data"), "y": P("data")}),
-    out_specs=(P(), P()), check_vma=False))
+    out_specs=(P(), P())))
 loss_c, g_c = gs(w, batch)
 loss_e, g_e = jax.value_and_grad(loss)(w, batch)
 rel = np.abs(np.asarray(g_c) - np.asarray(g_e)).max() / (np.abs(np.asarray(g_e)).max() + 1e-9)
