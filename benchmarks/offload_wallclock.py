@@ -1,10 +1,10 @@
 """Real-runtime benchmark of the framework's *own* offload overheads.
 
-Two subprocess-isolated measurements (the bench process keeps 1 device):
+Subprocess-isolated measurements (the bench process keeps 1 device):
 
-* **dispatch sweep** — for n ∈ {1, 2, 4, 8} clusters, the host-side
-  dispatch overhead of ``OffloadRuntime.offload()`` (time to launch,
-  excluding the blocking wait) in three regimes:
+* **dispatch sweep** (``offload_wallclock``) — for n ∈ {1, 2, 4, 8}
+  clusters, the host-side dispatch overhead of ``OffloadRuntime.offload()``
+  (time to launch, excluding the blocking wait) in three regimes:
 
     - ``cold``      first dispatch: plan build + compile + staging
     - ``warm``      warm plan, operands re-``device_put`` each job (the
@@ -12,14 +12,26 @@ Two subprocess-isolated measurements (the bench process keeps 1 device):
     - ``resident``  warm plan, resident operands — zero ``device_put``
 
   plus the end-to-end µs/job and, at n=8, the baseline-vs-multicast
-  wallclock and HLO collective structure (the paper's fig.-7 signature).
+  wallclock and HLO collective structure (the paper's fig.-7 signature),
+  and µs/token of ``ServeEngine`` for the legacy host round-trip loop vs
+  the device-resident single-step and ``lax.scan`` chunk paths.
 
-* **serve decode** — µs/token of ``ServeEngine`` for the legacy host
-  round-trip loop vs the device-resident single-step and ``lax.scan``
-  chunk paths, with per-token host->device transfer counts.
+* **stream suite** (``stream_wallclock``) — jobs/s over a stream of jobs:
+  sequential resident dispatch (the PR-1 fast path, one job at a time) vs
+  the pipelined ``OffloadStream`` in both modes — resident redispatch
+  through the in-flight window (same data movement as sequential, so the
+  delta is launch+fetch hidden behind compute) and fresh staging per job
+  (the slot double-buffer overlapping phase E with compute, against the
+  sequential re-staging baseline) — vs fused dispatch batching at B ∈
+  {1, 2, 4, 8} (per-job share of one batched launch), with the fused HLO
+  collective counts at B=2 vs B=8 (must not grow with B).
 
-``offload_wallclock()`` returns printable rows; the raw nested dict is kept
-on ``offload_wallclock.last_raw`` for ``benchmarks/run.py --json``.
+* **serve-throughput suite** (``serve_throughput``) — tokens/s of static
+  fixed-batch ``generate`` calls vs continuous-batching ``generate_many``
+  under a Poisson-ish arrival trace of variable-length prompts.
+
+Each suite returns printable rows; the raw nested dict is kept on the
+function's ``last_raw`` for ``benchmarks/run.py --json``.
 """
 
 from __future__ import annotations
@@ -133,6 +145,169 @@ print(json.dumps(out))
 """
 
 
+_STREAM_CHILD = """
+import json, statistics, time
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime, count_collectives
+from repro.core.stream import OffloadStream
+
+# Stream measurement wants the t_compute > t_stage + t_dispatch regime,
+# where pipelining hides the whole per-job host cost behind compute (the
+# amortization model's max(t_stage, t_compute) term): a mid-size matmul.
+job = jobs.make_matmul(256, 256, 256)
+N_JOBS = 32
+REPEATS = 5
+insts, _ = jobs.make_instances(job, 8, seed0=0)
+out = {}
+
+rt = OffloadRuntime(n_units=4)
+rt.offload(job, insts[0], n=8).wait()          # warm plan + compile
+
+def jobs_per_s(fn):
+    best = 0.0
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fn()
+        best = max(best, N_JOBS / (time.perf_counter() - t0))
+    return best
+
+def seq_resident():
+    for _ in range(N_JOBS):
+        rt.offload(job, "resident", n=8).wait()
+
+def seq_restage():
+    for i in range(N_JOBS):
+        rt.offload(job, insts[i % 8], n=8).wait()
+
+stream = OffloadStream(rt, job, n=8)
+stream.map(insts[:4])                          # warm the slot path
+
+def pipelined():
+    handles = [stream.submit(insts[i % 8]) for i in range(N_JOBS)]
+    for h in handles:
+        h.wait()
+
+def pipelined_resident():
+    # same data movement as seq_resident (none): isolates what the
+    # in-flight window buys — launch+fetch hidden behind compute
+    handles = [stream.submit("resident") for _ in range(N_JOBS)]
+    for h in handles:
+        h.wait()
+
+out["stream"] = {
+    "seq_resident_jobs_s": jobs_per_s(seq_resident),
+    "seq_restage_jobs_s": jobs_per_s(seq_restage),
+    "pipelined_jobs_s": jobs_per_s(pipelined),
+    "pipelined_resident_jobs_s": jobs_per_s(pipelined_resident),
+    "window": stream.window,
+    "window_stalls": stream.stats["window_stalls"],
+}
+
+# fused dispatch batching: per-job share of one batched launch.  The
+# fine-grained regime (tiny job, dispatch floor dominates) is where
+# fusing pays — the paper's axpy.
+job = jobs.make_axpy(16384)
+insts, _ = jobs.make_instances(job, 8, seed0=0)
+rtf = OffloadRuntime()
+rtf.offload(job, insts[0], n=8).wait()
+res_ts = []
+for _ in range(60):
+    t0 = time.perf_counter()
+    h = rtf.offload(job, "resident", n=8)
+    res_ts.append(time.perf_counter() - t0)
+    h.wait()
+resident_single_us = statistics.median(res_ts) * 1e6
+
+fused = {}
+for B in (1, 2, 4, 8):
+    bi, _ = jobs.make_instances(job, B, seed0=0)
+    rtf.offload_fused(job, bi, n=8).wait()     # compile + stage resident
+    ts, e2e = [], []
+    for _ in range(40):
+        t0 = time.perf_counter()
+        h = rtf.offload_fused(job, "resident", batch=B, n=8)
+        ts.append((time.perf_counter() - t0) / B)
+        h.wait()
+        e2e.append((time.perf_counter() - t0) / B)
+    fused[str(B)] = {
+        "dispatch_us_per_job": statistics.median(ts) * 1e6,
+        "e2e_us_per_job": statistics.median(e2e) * 1e6,
+    }
+out["fused"] = {
+    "resident_single_dispatch_us": resident_single_us,
+    "per_job": fused,
+    "collectives_B2": count_collectives(rtf.lowered_text(job, 8, fuse=2)),
+    "collectives_B8": count_collectives(rtf.lowered_text(job, 8, fuse=8)),
+}
+print(json.dumps(out))
+"""
+
+_CONT_SERVE_CHILD = """
+import json, time
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro import models as M
+from repro.dist.sharding import param_specs, to_shardings
+from repro.serve import ServeConfig, ServeEngine
+
+cfg = M.reduced(M.get("smollm-360m"))
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+params = M.init_params(jax.random.key(0), cfg)
+params = jax.device_put(params, to_shardings(param_specs(params, mesh), mesh))
+
+BATCH, N_NEW, R = 4, 16, 6
+rng = np.random.default_rng(0)
+lens = [6, 10, 14, 8, 12, 6][:R]
+reqs = [(rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32), N_NEW)
+        for s in lens]
+# Poisson-ish arrival trace: exponential-ish integer gaps, ~1 every 2 steps
+arrivals = np.cumsum(rng.poisson(2.0, size=R))
+arrivals = (arrivals - arrivals[0]).tolist()
+
+scfg = ServeConfig(batch=BATCH, max_len=48, prefill_bucket=8)
+out = {}
+
+# continuous batching: slots refill from the queue as requests retire
+eng = ServeEngine(cfg, params, mesh, scfg)
+eng.generate_many(reqs, arrival_steps=arrivals)          # compile + warm
+base = dict(eng.stats)
+t0 = time.perf_counter()
+outs = eng.generate_many(reqs, arrival_steps=arrivals)
+dt = time.perf_counter() - t0
+total = sum(len(o) for o in outs)
+out["continuous"] = {
+    "tok_s": total / dt,
+    "us_per_token": dt / total * 1e6,
+    "dispatches": eng.stats["xla_dispatches"] - base["xla_dispatches"],
+    "inserts": eng.stats["prefill_inserts"] - base["prefill_inserts"],
+}
+
+# static batching: fixed-shape generate per group of BATCH (last group
+# padded through the sub-batch path), prompts right-padded to group max
+eng2 = ServeEngine(cfg, params, mesh, scfg)
+groups = [list(range(i, min(i + BATCH, R))) for i in range(0, R, BATCH)]
+def run_static():
+    n = 0
+    for g in groups:
+        smax = max(lens[r] for r in g)
+        prompts = np.zeros((len(g), smax), np.int32)
+        for k, r in enumerate(g):
+            prompts[k, :lens[r]] = reqs[r][0]
+        n += eng2.generate(prompts, N_NEW).size
+    return n
+run_static()                                             # compile + warm
+t0 = time.perf_counter()
+total_static = run_static()
+dt = time.perf_counter() - t0
+out["static"] = {
+    "tok_s": total_static / dt,
+    "us_per_token": dt / total_static * 1e6,
+}
+print(json.dumps(out))
+"""
+
+
 def _run_child(code: str, timeout: int = 570, x64: bool = True) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -204,3 +379,74 @@ def offload_wallclock() -> Tuple[List[Row], str]:
 
 
 offload_wallclock.last_raw = {}
+
+
+def stream_wallclock() -> Tuple[List[Row], str]:
+    """Stream suite: sequential vs pipelined vs fused-dispatch jobs/s."""
+    rows: List[Row] = []
+    data = _run_child(_STREAM_CHILD)
+    st, fu = data["stream"], data["fused"]
+    rows.append(("stream/matmul256/8dev/seq_resident", st["seq_resident_jobs_s"],
+                 "jobs/s"))
+    rows.append(("stream/matmul256/8dev/seq_restage", st["seq_restage_jobs_s"],
+                 "jobs/s"))
+    rows.append(("stream/matmul256/8dev/pipelined", st["pipelined_jobs_s"],
+                 "jobs/s"))
+    rows.append(("stream/matmul256/8dev/pipelined_resident",
+                 st["pipelined_resident_jobs_s"], "jobs/s"))
+    rows.append(("stream/fused/resident_single_dispatch",
+                 fu["resident_single_dispatch_us"], "us/job"))
+    for b, d in sorted(fu["per_job"].items(), key=lambda kv: int(kv[0])):
+        rows.append((f"stream/fused/B{b}/dispatch",
+                     d["dispatch_us_per_job"], "us/job"))
+    rows.append(("stream/fused/allreduce_B2",
+                 fu["collectives_B2"]["all-reduce"], "collectives"))
+    rows.append(("stream/fused/allreduce_B8",
+                 fu["collectives_B8"]["all-reduce"], "collectives"))
+
+    amort = (fu["resident_single_dispatch_us"]
+             / max(fu["per_job"]["8"]["dispatch_us_per_job"], 1e-9))
+    speedup = (st["pipelined_resident_jobs_s"]
+               / max(st["seq_resident_jobs_s"], 1e-9))
+    stage_speedup = (st["pipelined_jobs_s"]
+                     / max(st["seq_restage_jobs_s"], 1e-9))
+    derived = (
+        f"pipelined resident {st['pipelined_resident_jobs_s']:.0f} jobs/s "
+        f"vs sequential resident {st['seq_resident_jobs_s']:.0f} jobs/s "
+        f"({speedup:.2f}x, window={st['window']}); staged pipeline vs "
+        f"re-staging {stage_speedup:.2f}x; fused B=8 dispatch "
+        f"{fu['per_job']['8']['dispatch_us_per_job']:.0f}us/job vs resident "
+        f"single {fu['resident_single_dispatch_us']:.0f}us/job "
+        f"({amort:.1f}x amortization); fused all-reduce count "
+        f"B=2 {fu['collectives_B2']['all-reduce']} == "
+        f"B=8 {fu['collectives_B8']['all-reduce']}")
+    stream_wallclock.last_raw = data
+    return rows, derived
+
+
+stream_wallclock.last_raw = {}
+
+
+def serve_throughput() -> Tuple[List[Row], str]:
+    """Serve suite: continuous batching vs static batches, tokens/s."""
+    rows: List[Row] = []
+    data = _run_child(_CONT_SERVE_CHILD, x64=False)
+    co, stat = data["continuous"], data["static"]
+    rows.append(("serve/throughput/continuous", co["tok_s"], "tok/s"))
+    rows.append(("serve/throughput/static", stat["tok_s"], "tok/s"))
+    rows.append(("serve/throughput/continuous/us_per_token",
+                 co["us_per_token"], "us/token"))
+    rows.append(("serve/throughput/static/us_per_token",
+                 stat["us_per_token"], "us/token"))
+    rows.append(("serve/throughput/inserts", co["inserts"], "prefills"))
+    ratio = co["tok_s"] / max(stat["tok_s"], 1e-9)
+    derived = (
+        f"continuous batching {co['tok_s']:.1f} tok/s vs static "
+        f"{stat['tok_s']:.1f} tok/s ({ratio:.2f}x) over a Poisson-ish "
+        f"arrival trace ({co['inserts']} prefill-inserts, "
+        f"{co['dispatches']} decode dispatches)")
+    serve_throughput.last_raw = data
+    return rows, derived
+
+
+serve_throughput.last_raw = {}

@@ -1,7 +1,7 @@
 """Benchmark harness: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig07,fig12,...] \\
-        [--json BENCH_offload.json]
+        [--json BENCH_offload.json] [--check BENCH_offload.json]
 
 Prints ``name,us_per_call,derived`` CSV.  Simulator-backed figures report
 modeled cycles (1 cycle = 1 ns at the paper's 1 GHz testbench); `derived`
@@ -12,12 +12,71 @@ value.
 per suite with its rows, the derived headline, and (where the suite exposes
 it, e.g. ``offload``) the raw measurement dict — so perf trajectories can be
 tracked across commits as ``BENCH_*.json`` files.
+
+``--check PATH`` compares this run against a recorded ``BENCH_*.json`` and
+exits non-zero when a headline metric regressed by more than ``--tolerance``
+(default 30%).  Row units drive the comparison direction: ``*/s`` rates must
+not drop, ``us*`` latencies must not grow, count-like units (collectives,
+puts, dispatches) must match exactly; cold-start rows (compile-dominated)
+are skipped.  CI wires a deterministic ``--only`` subset through this so
+benchmark bit-rot breaks the build.
 """
 
 import argparse
 import json
 import sys
 import time
+
+#: row-name fragments excluded from --check (compile-dominated, unbounded noise)
+CHECK_SKIP = ("/cold", "/error", "unix_time")
+
+
+def _direction(unit: str) -> str:
+    """-> "higher" | "lower" | "exact" for a row's unit string."""
+    if unit.endswith("/s"):
+        return "higher"
+    if unit.startswith("us") or unit.startswith("cycles"):
+        return "lower"
+    if unit in ("overhead_cycles", "percent"):   # error/overhead: shrinking ok
+        return "lower"
+    if unit == "speedup":
+        return "higher"
+    return "exact"
+
+
+def check_against(report: dict, recorded: dict, tolerance: float) -> int:
+    """Compare common rows; returns the number of regressions (printed)."""
+    regressions = 0
+    compared = 0
+    for suite, entry in report["suites"].items():
+        ref = recorded.get("suites", {}).get(suite)
+        if ref is None or "rows" not in entry or "rows" not in ref:
+            continue
+        ref_rows = {r["name"]: r for r in ref["rows"]}
+        for row in entry["rows"]:
+            name = row["name"]
+            old = ref_rows.get(name)
+            if old is None or any(s in name for s in CHECK_SKIP):
+                continue
+            new_v, old_v, unit = row["value"], old["value"], row["unit"]
+            direction = _direction(unit)
+            compared += 1
+            if direction == "exact":
+                bad = new_v != old_v
+                detail = f"{old_v} -> {new_v} (must match exactly)"
+            elif direction == "higher":
+                bad = new_v < old_v * (1.0 - tolerance)
+                detail = f"{old_v:.3f} -> {new_v:.3f} (floor {old_v * (1 - tolerance):.3f})"
+            else:
+                bad = new_v > old_v * (1.0 + tolerance)
+                detail = f"{old_v:.3f} -> {new_v:.3f} (ceiling {old_v * (1 + tolerance):.3f})"
+            if bad:
+                regressions += 1
+                print(f"# REGRESSION {name} [{unit}]: {detail}",
+                      file=sys.stderr)
+    print(f"# check: {compared} rows compared, {regressions} regressions",
+          file=sys.stderr)
+    return regressions
 
 
 def main() -> None:
@@ -26,15 +85,25 @@ def main() -> None:
                     help="comma-separated subset, e.g. fig07,fig12")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as structured JSON to PATH")
+    ap.add_argument("--check", default=None, metavar="PATH",
+                    help="compare headline metrics against a recorded "
+                         "BENCH_*.json; exit non-zero on regression")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed relative regression for --check "
+                         "(default 0.30)")
     args = ap.parse_args()
 
     from benchmarks.kernel_bench import kernel_table
-    from benchmarks.offload_wallclock import offload_wallclock
+    from benchmarks.offload_wallclock import (
+        offload_wallclock, serve_throughput, stream_wallclock,
+    )
     from benchmarks.paper_figs import ALL_FIGS
 
     suites = dict(ALL_FIGS)
     suites["kernels"] = kernel_table
     suites["offload"] = offload_wallclock
+    suites["stream"] = stream_wallclock
+    suites["serve_stream"] = serve_throughput
     if args.only:
         keep = set(args.only.split(","))
         suites = {k: v for k, v in suites.items() if k in keep}
@@ -66,6 +135,10 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
+    if args.check:
+        with open(args.check) as f:
+            recorded = json.load(f)
+        failures += check_against(report, recorded, args.tolerance)
     if failures:
         sys.exit(1)
 

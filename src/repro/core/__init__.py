@@ -2,7 +2,7 @@
 cycle-accurate phase simulator, and the analytical offload-runtime model."""
 
 from repro.core.completion import CompletionUnit
-from repro.core.jobs import PAPER_JOBS, PaperJob
+from repro.core.jobs import PAPER_JOBS, PaperJob, make_instances, stack_instances
 from repro.core.model import (
     axpy_closed_form,
     atax_closed_form_paper,
@@ -23,25 +23,28 @@ from repro.core.multicast import (
 )
 from repro.core.offload import (
     DispatchPlan,
+    FusedHandle,
     JobHandle,
     OffloadConfig,
     OffloadRuntime,
     PlanStats,
     count_collectives,
 )
+from repro.core.stream import OffloadStream
 from repro.core.params import DEFAULT_PARAMS, OccamyParams
 from repro.core.phases import Phase, PhaseStats
 from repro.core.simulator import JobSpec, SimResult, offload_overhead, simulate, speedups
 
 __all__ = [
     "AddressMap", "CompletionUnit", "DEFAULT_PARAMS", "DispatchPlan",
-    "JobHandle", "JobSpec",
+    "FusedHandle", "JobHandle", "JobSpec",
     "MulticastRequest", "OccamyParams", "OffloadConfig", "OffloadRuntime",
-    "PlanStats",
+    "OffloadStream", "PlanStats",
     "PAPER_JOBS", "PaperJob", "Phase", "PhaseStats", "SimResult",
     "atax_closed_form_paper", "axpy_closed_form", "count_collectives",
     "decode_cluster_selection", "decode_match", "encode_cluster_selection",
-    "encode_cluster_selection_multi", "offload_overhead", "optimal_clusters",
+    "encode_cluster_selection_multi", "make_instances", "offload_overhead",
+    "optimal_clusters",
     "predict", "predict_total", "predict_total_v2", "should_offload",
-    "simulate", "speedups", "validate",
+    "simulate", "speedups", "stack_instances", "validate",
 ]

@@ -32,7 +32,7 @@ Kernel/job mapping onto clusters (consistent between both views):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -340,6 +340,36 @@ def make_bfs(V: int = 256, seed_graph: int = 0) -> PaperJob:
         shard_axes={"adj": None},
         out_axis=None,  # computed redundantly; runtime keeps one copy
     )
+
+
+# ----------------------------------------------------------------------------
+# Fused-batch helpers (offload_fused / OffloadStream)
+# ----------------------------------------------------------------------------
+
+
+def make_instances(job: PaperJob, batch: int, seed0: int = 0
+                   ) -> Tuple[List[Dict[str, np.ndarray]], List[np.ndarray]]:
+    """B independent instances of ``job`` -> (operand dicts, expected)."""
+    pairs = [job.make_instance(seed0 + i) for i in range(batch)]
+    return [ops for ops, _ in pairs], [exp for _, exp in pairs]
+
+
+def stack_instances(instances: Sequence[Dict[str, np.ndarray]]
+                    ) -> Dict[str, np.ndarray]:
+    """Stack B operand dicts along a new leading batch axis.
+
+    All instances must share operand names/shapes/dtypes — they are B
+    draws of the *same* job, which is what makes one fused launch valid.
+    """
+    if not instances:
+        raise ValueError("stack_instances needs at least one instance")
+    names = sorted(instances[0])
+    for i, inst in enumerate(instances):
+        if sorted(inst) != names:
+            raise ValueError(
+                f"instance {i} operand names {sorted(inst)} != {names}")
+    return {name: np.stack([np.asarray(inst[name]) for inst in instances])
+            for name in names}
 
 
 #: Registry used by benchmarks and tests.

@@ -57,6 +57,32 @@ overhead §4 sets out to kill.  The runtime therefore caches a
   out of order, so outstanding handles (up to the runtime's ``n_units``
   completion-unit copies, §4.3) can be waited on in any order.
 
+Fused dispatch batching
+-----------------------
+
+The fast path shrinks the per-job overhead; it cannot remove the floor of
+one host dispatch per job.  ``offload_fused(job, [ops_0, ..., ops_B-1])``
+removes it by fusing B independent instances of the same job into **one**
+XLA launch: operands and job args gain a leading batch axis, the kernel is
+``vmap``-ed over it inside the sharded program, and any cross-cluster
+reduction happens once on the batched array — so the HLO collective count
+is independent of B while the fixed host dispatch cost is amortized to
+~1/B per job.  This is the software analogue of the paper's O(1) multicast
+wakeup (one doorbell wakes n clusters; here one dispatch launches B jobs),
+applied to this framework's own host critical path.  Fused plans support
+the same residency/donation semantics as single-job plans, and
+``lowered_text(job, n, fuse=B)`` exposes the batched program's HLO for the
+B-independence assertions.
+
+Streaming
+---------
+
+:class:`repro.core.stream.OffloadStream` builds on two hooks here: slot
+staging (``DispatchPlan.stage(operands, slot=k)`` uploads into a numbered
+buffer slot without touching residency, so job k+1's phase-E transfer can
+proceed while job k computes out of the other slot) and ``_launch`` (the
+dispatch tail shared by ``offload``/``offload_fused``/the stream).
+
 ``DispatchPlan.stats`` / ``OffloadRuntime.stats`` count device_puts, plan
 hits/misses, and resident hits — the hooks the fast-path tests and
 ``benchmarks/offload_wallclock.py`` assert against.
@@ -80,7 +106,7 @@ from repro.core.completion import (
     central_counter_arrivals,
     completion_unit_arrivals,
 )
-from repro.core.jobs import PaperJob
+from repro.core.jobs import PaperJob, stack_instances
 
 AXIS = "clusters"
 
@@ -112,8 +138,9 @@ class PlanStats:
     device_puts: int = 0          # operand/arg buffers uploaded
     resident_hits: int = 0        # operands reused without any upload
     args_hits: int = 0            # job-args upload skipped (unchanged value)
-    dispatches: int = 0           # jobs launched through this plan
+    dispatches: int = 0           # XLA launches through this plan
     donation_restages: int = 0    # re-uploads forced by a donated dispatch
+    fused_jobs: int = 0           # logical jobs carried by fused dispatches
 
 
 @dataclasses.dataclass
@@ -148,6 +175,18 @@ class JobHandle:
         return data
 
 
+@dataclasses.dataclass
+class FusedHandle(JobHandle):
+    """Handle for B jobs fused into one launch; ``wait()`` returns the
+    stacked (B, ...) output, ``wait_each()`` the per-job results."""
+
+    batch: int = 1
+
+    def wait_each(self) -> list:
+        data = self.wait()
+        return [np.asarray(data[i]) for i in range(self.batch)]
+
+
 class DispatchPlan:
     """Cached dispatch state for one (job, cluster selection, operand shapes).
 
@@ -155,12 +194,18 @@ class DispatchPlan:
     sub-mesh, per-operand ``NamedSharding``s, the compiled program, the last
     staged job-args value, and (optionally) *resident* operand buffers that
     repeated dispatch reuses without any host->device transfer.
+
+    ``fuse=B`` makes this a *fused* plan: operand shapes in ``op_meta``
+    carry a leading batch axis of length B, shard axes shift right by one,
+    and the compiled program vmaps the kernel over the batch — one launch
+    for B jobs.
     """
 
     def __init__(self, runtime: "OffloadRuntime", job: PaperJob,
                  devices: Sequence[jax.Device], cluster_ids: Sequence[int],
                  op_meta: Tuple[Tuple[str, Tuple[int, ...], str], ...],
-                 args_shape: Tuple[int, ...]):
+                 args_shape: Tuple[int, ...],
+                 fuse: Optional[int] = None):
         self.runtime = runtime
         self.job = job
         self.cluster_ids = tuple(cluster_ids)
@@ -168,6 +213,7 @@ class DispatchPlan:
         self.mesh = Mesh(np.asarray(devices), (AXIS,))
         self.op_meta = op_meta
         self.args_shape = tuple(args_shape)
+        self.fuse = fuse
         self.stats = PlanStats()
 
         cfg = runtime.config
@@ -175,23 +221,27 @@ class DispatchPlan:
             self.args_sharding = NamedSharding(self.mesh, P())
         else:
             self.args_sharding = NamedSharding(self.mesh, P(AXIS))
+        lead = 0 if fuse is None else 1   # fused shapes: (B,) + per-job shape
         self.op_shardings: Dict[str, NamedSharding] = {}
         for name, shape, _ in op_meta:
             axis = job.shard_axes[name]
-            spec = P() if axis is None else P(*([None] * axis + [AXIS]))
-            if axis is not None and shape[axis] % self.n_clusters:
+            spec = (P() if axis is None
+                    else P(*([None] * (axis + lead) + [AXIS])))
+            if axis is not None and shape[axis + lead] % self.n_clusters:
                 raise ValueError(
-                    f"operand {name} axis {axis} ({shape[axis]}) "
+                    f"operand {name} axis {axis} ({shape[axis + lead]}) "
                     f"not divisible by {self.n_clusters} clusters"
                 )
             self.op_shardings[name] = NamedSharding(self.mesh, spec)
 
         self.fn = runtime._build(
             job, self.mesh, self.n_clusters,
-            tuple(name for name, _, _ in op_meta), self.args_shape)
+            tuple(name for name, _, _ in op_meta), self.args_shape,
+            fuse=fuse)
 
         self._resident: Dict[str, Any] = {}       # name -> device buffer
         self._resident_src: Dict[str, np.ndarray] = {}  # name -> host array
+        self._slots: Dict[int, Dict[str, Any]] = {}  # stream staging slots
         self._args_val: Optional[np.ndarray] = None
         self._args_dev: Any = None
 
@@ -202,8 +252,17 @@ class DispatchPlan:
         return len(self._resident) == len(self.op_meta) > 0 or not self.op_meta
 
     def stage(self, operands: Dict[str, np.ndarray], *,
-              _caller_owned: bool = True) -> Dict[str, Any]:
-        """Phase-E upload of ``operands``; the buffers become resident."""
+              _caller_owned: bool = True,
+              slot: Optional[int] = None) -> Dict[str, Any]:
+        """Phase-E upload of ``operands``.
+
+        With ``slot=None`` (default) the buffers become *resident* — the
+        warm ``offload(job, "resident")`` path reuses them.  With a slot
+        number they land in that numbered staging slot instead, leaving
+        residency untouched: the double-buffering hook
+        :class:`~repro.core.stream.OffloadStream` uses to overlap job k+1's
+        upload with job k's compute.
+        """
         names = tuple(sorted(operands))
         if names != tuple(name for name, _, _ in self.op_meta):
             raise ValueError(
@@ -221,12 +280,18 @@ class DispatchPlan:
                     "(a dtype change needs a new plan, not a silent retrace)")
             staged[name] = jax.device_put(arr, self.op_shardings[name])
             self.stats.device_puts += 1
-            # donation restages from these refs later — snapshot caller
-            # arrays so in-place mutation cannot skew the redo (restages
-            # from our own snapshots skip the copy)
-            self._resident_src[name] = (
-                arr.copy() if donating and _caller_owned else arr)
-        self._resident = staged
+            if slot is None:
+                # donation restages from these refs later — snapshot caller
+                # arrays so in-place mutation cannot skew the redo (restages
+                # from our own snapshots skip the copy)
+                self._resident_src[name] = (
+                    arr.copy() if donating and _caller_owned else arr)
+        if slot is None:
+            self._resident = staged
+        else:
+            # slot buffers are single-use: each stream submit stages fresh
+            # operands, so a donated dispatch consuming them needs no redo
+            self._slots[slot] = staged
         return staged
 
     def invalidate(self, names: Optional[Sequence[str]] = None) -> None:
@@ -234,6 +299,7 @@ class DispatchPlan:
         if names is None:
             self._resident.clear()
             self._resident_src.clear()
+            self._slots.clear()
         else:
             for name in names:
                 self._resident.pop(name, None)
@@ -271,9 +337,10 @@ class DispatchPlan:
         self._args_val = job_args.copy()
         return self._args_dev
 
-    def _after_dispatch(self) -> None:
+    def _after_dispatch(self, consumed_resident: bool = True) -> None:
         self.stats.dispatches += 1
-        if self.runtime.config.donate_operands:
+        self.stats.fused_jobs += self.fuse if self.fuse else 1
+        if self.runtime.config.donate_operands and consumed_resident:
             # donated buffers are dead; keep host refs so reuse self-heals
             self._resident.clear()
 
@@ -308,6 +375,7 @@ class OffloadRuntime:
         self.unit = CompletionUnit(n_units=n_units)
         self._job_counter = 0
         self._compiled: Dict[Tuple, Any] = {}
+        self._hlo_text: Dict[Tuple, str] = {}   # lowered_text cache
         self._plans: Dict[Tuple, DispatchPlan] = {}
         self._retired_stats = PlanStats()   # counts from replaced plans
         self.plan_hits = 0
@@ -364,19 +432,21 @@ class OffloadRuntime:
         request: Optional[mc.MulticastRequest] = None,
         clusters: Optional[Sequence[int]] = None,
         args_shape: Tuple[int, ...] = (8,),
+        fuse: Optional[int] = None,
     ) -> DispatchPlan:
         """Resolve (and cache) the dispatch plan for a job/selection pair.
 
         With ``operands`` given, their shapes/dtypes seed (or validate) the
         plan; staging is separate (``plan.stage`` / a dict ``offload``).
         Without operands, the plan must already exist (from a prior dispatch
-        or ``plan()`` call) and is returned as-is.
+        or ``plan()`` call) and is returned as-is.  ``fuse=B`` resolves the
+        fused-batch plan (operand shapes carry the leading B axis).
         """
         devices, ids = self.select_clusters(
             n=n if (request is None and clusters is None) else None,
             request=request, clusters=clusters,
         )
-        key = (job.spec.name, tuple(ids), tuple(args_shape))
+        key = (job.spec.name, tuple(ids), tuple(args_shape), fuse)
         if operands is None:
             plan = self._plans.get(key)
             if plan is None:
@@ -396,7 +466,7 @@ class OffloadRuntime:
             return plan
         self.plan_misses += 1
         new_plan = DispatchPlan(self, job, devices, ids, op_meta,
-                                tuple(args_shape))
+                                tuple(args_shape), fuse=fuse)
         if plan is not None:   # replaced: keep its counts (after the build
             # succeeded, so a failing build leaves the old plan untouched)
             for f in dataclasses.fields(PlanStats):
@@ -437,9 +507,6 @@ class OffloadRuntime:
             args_shape=job_args.shape,
         )
 
-        job_id = self._job_counter
-        self._job_counter += 1
-
         # Phase A / job-info placement (multicast replicates, baseline
         # materializes on cluster 0) — skipped when the value is unchanged.
         args_dev = plan.stage_args(job_args)
@@ -449,11 +516,83 @@ class OffloadRuntime:
             op_dev = plan.resident_operands()
         else:
             op_dev = plan.stage(operands)
+        return self._launch(plan, args_dev, op_dev)
 
+    def offload_fused(
+        self,
+        job: PaperJob,
+        instances: Union[Sequence[Dict[str, np.ndarray]], str],
+        job_args: Optional[np.ndarray] = None,
+        n: Optional[int] = None,
+        request: Optional[mc.MulticastRequest] = None,
+        clusters: Optional[Sequence[int]] = None,
+        batch: Optional[int] = None,
+    ) -> FusedHandle:
+        """Fuse B instances of ``job`` into one XLA launch.
+
+        ``instances`` is a sequence of B operand dicts (stacked host-side
+        along a new leading batch axis and phase-E staged as one transfer
+        per operand) or ``"resident"`` to redispatch the previously staged
+        batch (``batch=B`` then selects the fused plan).  ``job_args`` may
+        be one (A,) vector shared by all jobs or a (B, A) array of per-job
+        args.  Returns a :class:`FusedHandle` whose ``wait()`` yields the
+        stacked (B, ...) results.
+
+        The host pays ~1/B of the per-job dispatch cost while the lowered
+        program's collective count stays independent of B (asserted by
+        tests over ``lowered_text(job, n, fuse=B)``).
+        """
+        resident = isinstance(instances, str)
+        if resident:
+            if instances != RESIDENT:
+                raise ValueError(f"unknown operands mode {instances!r}")
+            if batch is None:
+                raise ValueError("resident fused dispatch needs batch=B")
+            B = batch
+        else:
+            B = len(instances)
+            if B < 1:
+                raise ValueError("offload_fused needs at least one instance")
+            if batch is not None and batch != B:
+                raise ValueError(f"batch={batch} != len(instances)={B}")
+
+        if job_args is None:
+            job_args = np.ones((8,), dtype=np.float64)
+        job_args = np.asarray(job_args, dtype=np.float64)
+        if job_args.ndim == 1:
+            job_args = np.broadcast_to(job_args, (B,) + job_args.shape).copy()
+        if job_args.shape[0] != B:
+            raise ValueError(
+                f"job_args leading axis {job_args.shape[0]} != batch {B}")
+
+        stacked = None if resident else stack_instances(instances)
+        plan = self.plan(
+            job, operands=stacked,
+            n=n, request=request, clusters=clusters,
+            args_shape=job_args.shape, fuse=B,
+        )
+        args_dev = plan.stage_args(job_args)
+        # the stacked dict is ours (fresh arrays from stack_instances), so
+        # donation needs no defensive snapshot of it
+        op_dev = (plan.resident_operands() if resident
+                  else plan.stage(stacked, _caller_owned=False))
+        handle = self._launch(plan, args_dev, op_dev)
+        return FusedHandle(handle.job_id, handle.result, handle.arrivals,
+                           plan.n_clusters, handle.dispatched_at, self,
+                           batch=B)
+
+    def _launch(self, plan: DispatchPlan, args_dev: Any,
+                op_dev: Dict[str, Any],
+                consumed_resident: bool = True) -> JobHandle:
+        """The dispatch tail shared by offload/offload_fused/OffloadStream:
+        program a completion unit, launch the compiled program (async),
+        return the in-flight handle."""
+        job_id = self._job_counter
+        self._job_counter += 1
         self.unit.program(plan.n_clusters, job_id)
         result, arrivals = plan.fn(
             args_dev, *(op_dev[name] for name, _, _ in plan.op_meta))
-        plan._after_dispatch()
+        plan._after_dispatch(consumed_resident=consumed_resident)
         return JobHandle(job_id, result, arrivals, plan.n_clusters,
                          time.monotonic(), self)
 
@@ -465,9 +604,9 @@ class OffloadRuntime:
 
     # -- program construction ---------------------------------------------------------
 
-    def _build(self, job, mesh, n, op_names, args_shape):
+    def _build(self, job, mesh, n, op_names, args_shape, fuse=None):
         key = (job.spec.name, self.config, n, op_names, args_shape,
-               tuple(d.id for d in mesh.devices.flat))
+               tuple(d.id for d in mesh.devices.flat), fuse)
         if key in self._compiled:
             return self._compiled[key]
 
@@ -476,13 +615,16 @@ class OffloadRuntime:
         out_axis = job.out_axis
         reduce = job.reduce
         compute = job.compute
+        lead = 0 if fuse is None else 1
 
         in_specs = [P(AXIS) if cfg.info_dist == "p2p_chain" else P()]
         for name in op_names:
             ax = shard_axes[name]
-            in_specs.append(P() if ax is None else P(*([None] * ax + [AXIS])))
+            in_specs.append(
+                P() if ax is None else P(*([None] * (ax + lead) + [AXIS])))
         out_specs = (
-            P() if out_axis is None else P(*([None] * out_axis + [AXIS])),
+            P() if out_axis is None
+            else P(*([None] * (out_axis + lead) + [AXIS])),
             P(),
         )
 
@@ -495,17 +637,26 @@ class OffloadRuntime:
             # The job-info scale rides through the computation so the
             # distribution chain is live in the HLO (and so a wrong
             # distribution corrupts the result -> tested).
-            scale = local_args[0]
 
             # Phase F: the kernel, on this cluster's shard.
-            out = compute(*ops)
-            out = out * scale.astype(out.dtype)
+            if fuse is None:
+                out = compute(*ops)
+                out = out * local_args[0].astype(out.dtype)
+            else:
+                # B fused jobs: vmap the kernel over the leading batch axis;
+                # each job keeps its own args scale.  The cross-cluster
+                # reduction below acts on the batched array, so the
+                # collective count stays independent of B.
+                def one_job(job_ops, scale):
+                    out = compute(*job_ops)
+                    return out * scale.astype(out.dtype)
+                out = jax.vmap(one_job)(ops, local_args[:, 0])
             if out_axis is None and reduce == "sum":
                 out = jax.lax.psum(out, AXIS)
             elif out_axis is None and reduce == "mean":
                 out = jax.lax.pmean(out, AXIS)
 
-            # Phase H: completion notification.
+            # Phase H: completion notification (one per launch, fused or not).
             done = jnp.float32(1.0)
             if cfg.completion == "unit":
                 arrivals = completion_unit_arrivals(done, AXIS)
@@ -526,20 +677,37 @@ class OffloadRuntime:
 
     # -- introspection -------------------------------------------------------------
 
-    def lowered_text(self, job: PaperJob, n: int, seed: int = 0) -> str:
+    def lowered_text(self, job: PaperJob, n: int, seed: int = 0,
+                     fuse: Optional[int] = None) -> str:
         """Compiled HLO of the offloaded program — used by tests/benchmarks to
-        assert the collective structure (chain depth vs broadcast tree)."""
-        operands, _ = job.make_instance(seed)
+        assert the collective structure (chain depth vs broadcast tree).
+
+        The text is cached per (job, n, config, fuse, device set): repeated
+        structure assertions read the cache instead of paying a fresh
+        lower+compile each call.  ``fuse=B`` lowers the fused-batch program.
+        """
         devices, _ = self.select_clusters(n=n)
+        key = (job.spec.name, self.config, n, fuse,
+               tuple(d.id for d in devices))
+        cached = self._hlo_text.get(key)
+        if cached is not None:
+            return cached
+        operands, _ = job.make_instance(seed)
         mesh = Mesh(np.asarray(devices), (AXIS,))
-        fn = self._build(job, mesh, n, tuple(sorted(operands)), (8,))
+        fn = self._build(job, mesh, n, tuple(sorted(operands)), (8,) if
+                         fuse is None else (fuse, 8), fuse=fuse)
         ftype = jnp.zeros((), jnp.float64).dtype  # honours jax_enable_x64
-        args_shape = (n, 8) if self.config.info_dist == "p2p_chain" else (8,)
+        lead = () if fuse is None else (fuse,)
+        args_shape = lead + (8,)
+        if self.config.info_dist == "p2p_chain":
+            args_shape = (n,) + args_shape
         sds = [jax.ShapeDtypeStruct(args_shape, ftype)]
         for name in sorted(operands):
             arr = np.asarray(operands[name])
-            sds.append(jax.ShapeDtypeStruct(arr.shape, ftype))
-        return fn.lower(*sds).compile().as_text()
+            sds.append(jax.ShapeDtypeStruct(lead + arr.shape, ftype))
+        text = fn.lower(*sds).compile().as_text()
+        self._hlo_text[key] = text
+        return text
 
 
 def count_collectives(hlo: str) -> Dict[str, int]:

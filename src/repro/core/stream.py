@@ -1,0 +1,145 @@
+"""Pipelined multi-job offload stream — overlap staging with execution.
+
+The paper's companion work ("Optimizing Offload Performance in Heterogeneous
+MPSoCs", arXiv:2404.01908) shows that once the per-job offload overhead has
+been shrunk (multicast, resident operands), the remaining floor is hidden by
+*overlapping* offload phases of job k+1 with the execution of job k.
+:class:`OffloadStream` is that overlap for this framework's own host
+critical path:
+
+* **double-buffered phase-E staging** — each ``submit()`` uploads its
+  operands into the next of ``depth`` staging slots of the shared
+  :class:`~repro.core.offload.DispatchPlan` (``plan.stage(ops, slot=k)``).
+  JAX transfers and launches are async, so job k+1's ``device_put`` runs
+  while job k's compute occupies the clusters — the E(k+1) || F(k) overlap
+  of the paper's phase diagram (fig. 3), with ``depth`` bounding how many
+  upload buffers exist at once.
+* **bounded in-flight window** — at most ``window`` jobs are outstanding,
+  defaulting to the runtime's ``n_units`` completion-unit copies (fig. 6:
+  one unit instance per outstanding job).  A ``submit()`` into a full
+  window first drains the oldest handle (a *window stall*, counted in
+  ``stats``).
+* **out-of-order completion drain** — handles may be waited in any order;
+  :meth:`~repro.core.completion.CompletionUnit.collect` parks other jobs'
+  causes, exactly as for plain async ``offload()``.
+
+Typical use::
+
+    rt = OffloadRuntime(n_units=4)
+    stream = OffloadStream(rt, job, n=8)
+    handles = [stream.submit(ops) for ops in instances]   # pipelined
+    results = [h.wait() for h in handles]                 # any order
+
+or, submit-and-drain in one call::
+
+    results = stream.map(instances)
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.jobs import PaperJob
+from repro.core.offload import DispatchPlan, JobHandle, OffloadRuntime
+from repro.core import multicast as mc
+
+
+class OffloadStream:
+    """An async job queue over :class:`OffloadRuntime` with pipelined
+    staging.  One stream drives one (job, cluster selection) pair — the
+    regime where a dispatch plan is warm and the only per-job costs left
+    are staging and launch."""
+
+    def __init__(self, runtime: OffloadRuntime, job: PaperJob, *,
+                 n: Optional[int] = None,
+                 request: Optional[mc.MulticastRequest] = None,
+                 clusters: Optional[Sequence[int]] = None,
+                 depth: int = 2,
+                 window: Optional[int] = None):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if window is not None and window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.runtime = runtime
+        self.job = job
+        self._sel = dict(n=n, request=request, clusters=clusters)
+        self.depth = depth
+        # the window is capped by the completion-unit copies: job k and job
+        # k + n_units share a unit, so k must have completed first
+        self.window = min(window or runtime.unit.n_units,
+                          runtime.unit.n_units)
+        self.plan: Optional[DispatchPlan] = None
+        self._inflight: Deque[JobHandle] = collections.deque()
+        self._seq = 0
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "window_stalls": 0, "drained": 0,
+        }
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    def submit(self, operands, job_args: Optional[np.ndarray] = None
+               ) -> JobHandle:
+        """Stage into the next buffer slot and launch; returns the handle.
+
+        ``operands`` is a host operand dict (phase-E staged into the next
+        of ``depth`` slots — the upload overlaps with the in-flight jobs'
+        compute) or ``"resident"`` to redispatch the plan's resident
+        buffers with zero staging (the pipeline then pays only launch +
+        fetch per job, and the window hides those behind compute).  The
+        launch itself is async, so a caller looping ``submit()`` keeps up
+        to ``window`` jobs in flight with zero blocking until the window
+        fills.
+        """
+        if job_args is None:
+            job_args = np.ones((8,), dtype=np.float64)
+        job_args = np.asarray(job_args, dtype=np.float64)
+        resident = isinstance(operands, str)
+        if resident and operands != "resident":
+            raise ValueError(f"unknown operands mode {operands!r}")
+        if self.plan is None:
+            self.plan = self.runtime.plan(
+                self.job, None if resident else operands,
+                args_shape=job_args.shape, **self._sel)
+        if resident:
+            staged = self.plan.resident_operands()
+        else:
+            staged = self.plan.stage(operands, slot=self._seq % self.depth)
+        if len(self._inflight) >= self.window:
+            # all completion-unit copies busy: block on the oldest job
+            self._inflight.popleft().wait()
+            self.stats["window_stalls"] += 1
+        args_dev = self.plan.stage_args(job_args)
+        handle = self.runtime._launch(self.plan, args_dev, staged,
+                                      consumed_resident=resident)
+        self._inflight.append(handle)
+        self._seq += 1
+        self.stats["submitted"] += 1
+        return handle
+
+    def drain(self) -> List[Any]:
+        """Wait for every in-flight job, in submit order; returns results."""
+        out = []
+        while self._inflight:
+            out.append(self._inflight.popleft().wait())
+            self.stats["drained"] += 1
+        return out
+
+    def map(self, instances: Sequence[Dict[str, np.ndarray]],
+            job_args: Optional[Sequence[np.ndarray]] = None) -> List[Any]:
+        """Submit every instance through the pipelined window, then wait.
+
+        Results come back in submit order regardless of completion order
+        (``JobHandle.wait()`` is idempotent, so handles already drained by
+        window stalls just return their cached data).
+        """
+        if job_args is None:
+            handles = [self.submit(ops) for ops in instances]
+        else:
+            handles = [self.submit(ops, a)
+                       for ops, a in zip(instances, job_args)]
+        return [h.wait() for h in handles]

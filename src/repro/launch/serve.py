@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \\
         --batch 4 --prompt-len 16 --new-tokens 32
+
+Continuous batching (variable-length requests streamed into the fixed
+decode batch under a Poisson-ish arrival trace):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \\
+        --batch 4 --continuous --requests 8 --arrival-rate 0.5
 """
 
 from __future__ import annotations
@@ -36,6 +42,14 @@ def main() -> None:
                          "or the legacy host round-trip")
     ap.add_argument("--decode-chunk", type=int, default=8,
                     help="tokens per dispatch in chunk mode")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: stream --requests variable-"
+                         "length prompts through the slot scheduler")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of streamed requests (continuous mode)")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="mean arrivals per decode step of the Poisson-ish "
+                         "trace (continuous mode)")
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -54,6 +68,27 @@ def main() -> None:
                        decode_mode=args.decode_mode,
                        decode_chunk=args.decode_chunk)
     engine = ServeEngine(cfg, params, mesh, scfg)
+
+    if args.continuous:
+        rng = np.random.default_rng(args.seed)
+        lens = rng.integers(max(2, args.prompt_len // 2),
+                            args.prompt_len + 1, size=args.requests)
+        reqs = [(rng.integers(0, cfg.vocab_size, (int(s),)).astype(np.int32),
+                 args.new_tokens) for s in lens]
+        gaps = rng.poisson(1.0 / max(args.arrival_rate, 1e-6),
+                           size=args.requests)
+        arrivals = np.cumsum(gaps) - gaps[0]
+        t0 = time.time()
+        outs = engine.generate_many(reqs, arrival_steps=arrivals.tolist())
+        dt = time.time() - t0
+        total = sum(len(o) for o in outs)
+        print(f"[serve] continuous: {args.requests} requests, {total} tokens "
+              f"in {dt:.2f}s ({total / dt:.1f} tok/s, batch {args.batch}, "
+              f"{engine.stats['prefill_inserts']} inserts)")
+        for r in range(min(2, args.requests)):
+            print(f"  req {r}: prompt_len={lens[r]} arrival={arrivals[r]} "
+                  f"-> {outs[r][:12].tolist()}")
+        return
 
     stream = SyntheticStream(
         DataConfig(vocab_size=cfg.vocab_size, batch_size=args.batch,

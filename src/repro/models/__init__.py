@@ -6,13 +6,15 @@ from repro.models.config import (
     reduced,
 )
 from repro.models.model import (
-    CallConfig, decode_step, forward, init_cache, init_params, loss_fn, prefill,
+    CallConfig, decode_step, decode_step_ragged, forward, init_cache,
+    init_params, loss_fn, prefill,
 )
 from repro.models.registry import ARCHS, count_params, get
 
 __all__ = [
     "ARCHS", "CallConfig", "FrontendConfig", "HybridConfig", "MLAConfig",
     "MoEConfig", "ModelConfig", "SSMConfig", "count_params", "decode_step",
+    "decode_step_ragged",
     "forward", "get", "init_cache", "init_params", "loss_fn", "prefill",
     "reduced",
 ]

@@ -217,6 +217,37 @@ def gqa_decode(x, p, cfg: ModelConfig, k_cache, v_cache, pos):
     return out, k_cache, v_cache
 
 
+def gqa_decode_ragged(x, p, cfg: ModelConfig, k_cache, v_cache, pos_b):
+    """One-token decode with a *per-row* position (continuous batching).
+
+    ``pos_b``: (B,) int32 — row b's cache is updated at ``pos_b[b]`` and
+    attended over ``cache[b, :pos_b[b]+1]``, so slots whose requests joined
+    the batch at different times (different prompt lengths / arrival steps)
+    decode together in one program.  RoPE/positional encoding uses each
+    row's own absolute position.  k_cache/v_cache: (B, Smax, Hkv*dh).
+    """
+    positions = pos_b[:, None]                              # (B, 1)
+    q, k, v = gqa_project(x, p, cfg, positions)             # (B,H,1,d)
+    upd = jax.vmap(
+        lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0)))
+    k_cache = upd(k_cache, _merge_heads(k), pos_b)
+    v_cache = upd(v_cache, _merge_heads(v), pos_b)
+    kk = _split_heads(k_cache, cfg.n_kv_heads)              # (B,Hkv,Smax,d)
+    vv = _split_heads(v_cache, cfg.n_kv_heads)
+    hq = cfg.n_heads
+    kk = jnp.repeat(kk, hq // cfg.n_kv_heads, axis=1)
+    vv = jnp.repeat(vv, hq // cfg.n_kv_heads, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / (cfg.head_dim ** 0.5)
+    valid = (jnp.arange(k_cache.shape[1])[None, None, None, :]
+             <= pos_b[:, None, None, None])
+    s = jnp.where(valid, s, NEG_INF)
+    o = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1),
+                   vv.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", _merge_heads(o), p["wo"].astype(x.dtype))
+    return out, k_cache, v_cache
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2): low-rank KV compression; the cache stores only
 # (c_kv, k_rope) — kv_lora_rank + rope_dim per token instead of 2·H·d.

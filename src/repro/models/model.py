@@ -500,6 +500,51 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
     return unembed(params, cfg, x), new_cache
 
 
+def decode_step_ragged(params: Params, cfg: ModelConfig, cache: Params,
+                       tokens: jnp.ndarray, pos_b: jnp.ndarray,
+                       call: CallConfig = CallConfig()
+                       ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step with *per-row* positions (continuous batching).
+
+    ``pos_b``: (B,) int32 — each batch row writes its KV at its own cache
+    position and attends over its own prefix, so rows at different
+    generation depths (late-joining requests, different prompt lengths)
+    share one program.  Attention families only: SSM/hybrid state caches
+    are position-free recurrences whose shared scan carry cannot be
+    row-shifted, and MLA keeps the uniform-``pos`` path for now.
+    """
+    if cfg.family in ("ssm", "hybrid") or cfg.mla or cfg.frontend:
+        raise NotImplementedError(
+            "ragged decode is implemented for the plain attention family "
+            "only (no SSM/hybrid/MLA state, no modality-prefix frontends)")
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + sinusoidal_positions(pos_b[:, None], cfg.d_model).astype(dt)
+
+    def body(x, xs):
+        lp, kcl, vcl = xs
+        hin = rms_norm(x, lp["ln1"], cfg.norm_eps, plus_one=cfg.embed_scale)
+        o, kcl, vcl = attn.gqa_decode_ragged(hin, lp["attn"], cfg, kcl, vcl,
+                                             pos_b)
+        x = x + o
+        hin = rms_norm(x, lp["ln2"], cfg.norm_eps, plus_one=cfg.embed_scale)
+        if cfg.moe:
+            delta, _ = moe_lib.moe_block(hin, lp["moe"], cfg, no_drop=True)
+            x = x + delta
+        else:
+            x = x + gated_mlp(hin, lp["mlp"]["wi"], lp["mlp"]["wg"],
+                              lp["mlp"]["wo"], cfg.act)
+        return x, (kcl, vcl)
+
+    x, (kc, vc) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    new_cache = {"k": kc, "v": vc, "pos": jnp.max(pos_b) + 1}
+    return unembed(params, cfg, x), new_cache
+
+
 # =============================================================================
 # Prefill: forward + cache population
 # =============================================================================

@@ -1,3 +1,6 @@
-"""Serving substrate: batched prefill/decode engine."""
-from repro.serve.engine import ServeConfig, ServeEngine, build_serve_step
-__all__ = ["ServeConfig", "ServeEngine", "build_serve_step"]
+"""Serving substrate: batched prefill/decode engine + continuous batching."""
+from repro.serve.engine import (
+    ServeConfig, ServeEngine, build_ragged_step, build_serve_step,
+)
+__all__ = ["ServeConfig", "ServeEngine", "build_ragged_step",
+           "build_serve_step"]

@@ -23,14 +23,29 @@ per-job tax the paper kills, so the engine now keeps the token resident:
 * ``decode_mode="host"`` — the seed's host-round-trip loop, kept as the
   measurable "before" for ``benchmarks/offload_wallclock.py``.
 
+Continuous batching (``generate_many``): the static engine pays one full
+fixed-shape batch per ``generate`` call — a half-empty batch decodes at
+full-batch cost, and a queued request waits for the whole previous batch
+to finish.  ``generate_many`` instead runs a slot scheduler over the fixed
+decode batch: variable-length prompts are admitted into free slots as they
+arrive (a bucketed prefill of ``prompt[:-1]`` is scattered into the slot's
+cache rows; the last prompt token becomes the slot's pending decode
+token), every step advances *all* occupied slots through one
+``decode_step_ragged`` dispatch (per-slot cache positions, so slots at
+different generation depths share the program), finished slots retire via
+the done-mask and immediately refill from the queue.  The decode batch
+stays full under streaming traffic — the offload-stream idea applied to
+serving.
+
 ``ServeEngine.stats`` counts per-token host->device transfers and XLA
 dispatches so tests and benchmarks can assert the fast-path properties.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +56,8 @@ from repro.core.completion import CompletionUnit
 from repro.dist.sharding import batch_specs, cache_specs, param_specs, to_shardings
 from repro.models.config import ModelConfig
 from repro.models.model import (
-    CallConfig, decode_step, init_cache, init_params, prefill,
+    CallConfig, decode_step, decode_step_ragged, init_cache, init_params,
+    prefill,
 )
 
 Pytree = Any
@@ -189,6 +205,46 @@ def build_decode_chunk(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
     return jitted, cspecs, tok_sharding
 
 
+def build_ragged_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                      temperature: float,
+                      call: CallConfig = CallConfig(moe_no_drop=True),
+                      shardings=None):
+    """Continuous-batching decode step: per-slot positions + done-mask.
+
+    (params, cache, tok (B,1), pos_b (B,), active (B,), key, idx) ->
+        (next tok (B,1), pos_b', key', idx+1, cache').
+    Each occupied slot writes/attends its own cache position (see
+    ``decode_step_ragged``); free slots (``active == 0``) hold their
+    position so their writes stay confined to one stale cell, which the
+    next prefill-insert overwrites.
+    """
+    pspecs, cspecs, tok_sharding = (
+        shardings or _serve_shardings(cfg, mesh, batch, max_len))
+    sample = _sampler(temperature)
+    repl = NamedSharding(mesh, P())
+
+    def step(params, cache, tok, pos_b, active, key, idx):
+        logits, cache = decode_step_ragged(params, cfg, cache, tok, pos_b,
+                                           call)
+        lg = logits[:, 0] if logits.ndim == 3 else logits
+        key = jax.random.fold_in(key, idx)
+        nxt = sample(lg, key)
+        pos_b = pos_b + active.astype(pos_b.dtype)
+        return nxt[:, None], pos_b, key, idx + 1, cache
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            to_shardings(pspecs, mesh), to_shardings(cspecs, mesh),
+            tok_sharding, repl, repl, repl, repl,
+        ),
+        out_shardings=(tok_sharding, repl, repl, repl,
+                       to_shardings(cspecs, mesh)),
+        donate_argnums=(1,),
+    )
+    return jitted, cspecs, tok_sharding
+
+
 @dataclasses.dataclass
 class ServeConfig:
     batch: int = 8
@@ -197,6 +253,8 @@ class ServeConfig:
     seed: int = 0
     decode_mode: str = "step"        # "step" | "chunk" | "host" (legacy)
     decode_chunk: int = 8            # tokens per dispatch in "chunk" mode
+    prefill_bucket: int = 16         # generate_many pads prefills to this
+                                     # granularity (bounds compile count)
 
 
 class ServeEngine:
@@ -218,8 +276,12 @@ class ServeEngine:
         self._sampled_step = None      # built lazily per decode mode
         self._chunk_fn = None
         self._first_fn = None
+        self._ragged_step = None       # continuous-batching programs
+        self._insert_fn = None
+        self._prefill_fn = None
         self.stats = {"h2d_token_puts": 0, "xla_dispatches": 0,
-                      "tokens_emitted": 0}
+                      "tokens_emitted": 0, "prefill_inserts": 0,
+                      "requests_retired": 0, "batch_padded_rows": 0}
 
     # -- program cache -----------------------------------------------------------
 
@@ -238,14 +300,69 @@ class ServeEngine:
                 shardings=self._shardings)
         return self._chunk_fn
 
+    def _get_ragged_step(self):
+        if self._ragged_step is None:
+            self._ragged_step, _, _ = build_ragged_step(
+                self.cfg, self.mesh, self.scfg.batch, self.scfg.max_len,
+                self.scfg.temperature, self.call, shardings=self._shardings)
+        return self._ragged_step
+
+    def _get_insert_fn(self):
+        if self._insert_fn is None:
+            cshard = to_shardings(self.cspecs, self.mesh)
+
+            def ins(cache, k_rows, v_rows, slot):
+                k = jax.lax.dynamic_update_slice(
+                    cache["k"], k_rows.astype(cache["k"].dtype),
+                    (0, slot, 0, 0))
+                v = jax.lax.dynamic_update_slice(
+                    cache["v"], v_rows.astype(cache["v"].dtype),
+                    (0, slot, 0, 0))
+                return dict(cache, k=k, v=v)
+
+            self._insert_fn = jax.jit(ins, out_shardings=cshard,
+                                      donate_argnums=(0,))
+        return self._insert_fn
+
+    def _get_prefill_fn(self):
+        # jit caches one program per prefill bucket length
+        if self._prefill_fn is None:
+            self._prefill_fn = jax.jit(
+                lambda p, toks: prefill(p, self.cfg, {"tokens": toks},
+                                        self.scfg.max_len, self.call))
+        return self._prefill_fn
+
     # -- generation ---------------------------------------------------------------
 
     def generate(self, prompts: np.ndarray, n_new: int,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None
                  ) -> np.ndarray:
-        """prompts: (B, S_prompt) int32 -> (B, n_new) generated ids."""
+        """prompts: (b, S_prompt) int32 -> (b, n_new) generated ids.
+
+        ``b`` may be any size up to the configured batch: a sub-batch is
+        padded to ``scfg.batch`` (repeating the last prompt row, so every
+        padded row is a valid token sequence) and the output sliced back —
+        the fixed-shape programs never see a new batch size, so no
+        recompile.  Batch rows are computed independently, so padding does
+        not change the real rows' tokens.
+        """
         b = prompts.shape[0]
-        assert b == self.scfg.batch, (b, self.scfg.batch)
+        if b > self.scfg.batch:
+            raise ValueError(
+                f"batch {b} exceeds configured batch {self.scfg.batch}")
+        if b < self.scfg.batch:
+            pad = self.scfg.batch - b
+            self.stats["batch_padded_rows"] += pad
+            prompts = np.concatenate(
+                [prompts, np.broadcast_to(
+                    prompts[-1:], (pad,) + prompts.shape[1:])], axis=0)
+            if extra_inputs:
+                extra_inputs = {
+                    k: np.concatenate(
+                        [v, np.broadcast_to(
+                            np.asarray(v)[-1:], (pad,) + np.asarray(v).shape[1:])],
+                        axis=0)
+                    for k, v in extra_inputs.items()}
         batch = {"tokens": jnp.asarray(prompts)}
         if extra_inputs:
             batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
@@ -259,8 +376,10 @@ class ServeEngine:
         if mode not in ("host", "step", "chunk"):
             raise ValueError(f"decode_mode {mode!r} not in host/step/chunk")
         if mode == "host":
-            return self._generate_host_loop(logits, cache, key, n_new)
-        return self._generate_resident(logits, cache, key, n_new)
+            out = self._generate_host_loop(logits, cache, key, n_new)
+        else:
+            out = self._generate_resident(logits, cache, key, n_new)
+        return out[:b]
 
     def _generate_resident(self, logits, cache, key, n_new: int) -> np.ndarray:
         """Device-resident decode: the token never visits the host."""
@@ -317,6 +436,140 @@ class ServeEngine:
             tok = sample(logits[:, 0] if logits.ndim == 3 else logits, key)
             self._dispatch_end(job, tokens=1)
         return np.stack([np.asarray(t) for t in out], axis=1)
+
+    # -- continuous batching -------------------------------------------------------
+
+    def generate_many(self, requests: Sequence[Tuple[np.ndarray, int]],
+                      arrival_steps: Optional[Sequence[int]] = None
+                      ) -> List[np.ndarray]:
+        """Continuous batching over ``requests`` = [(prompt, n_new), ...].
+
+        Prompts are variable-length 1-D int32 arrays.  Requests are
+        admitted into free slots of the fixed decode batch in arrival
+        order; each decode step advances every occupied slot through one
+        ``decode_step_ragged`` dispatch; a slot that has emitted its
+        ``n_new`` tokens retires and refills from the queue.  Returns the
+        (n_new_r,) generated ids per request, in request order.
+
+        ``arrival_steps`` (optional, same length) gives each request the
+        earliest decode step at which it may be admitted — an arrival
+        trace for throughput benchmarks; steps where the batch is entirely
+        idle are skipped, not decoded.
+
+        Greedy outputs are schedule-independent: batch rows are computed
+        independently, so a request's tokens do not depend on which other
+        requests it shares the batch with (temperature sampling shares one
+        key trajectory across the batch and is reproducible per schedule,
+        not per request).
+        """
+        if (self.cfg.family in ("ssm", "hybrid") or self.cfg.mla
+                or self.cfg.frontend):
+            raise NotImplementedError(
+                "continuous batching requires the plain attention family "
+                "(ragged per-slot cache positions; modality-prefix "
+                "frontends would shift every slot's positions)")
+        scfg = self.scfg
+        reqs = [(np.asarray(p, np.int32).ravel(), int(m))
+                for p, m in requests]
+        R = len(reqs)
+        arrivals = ([0] * R if arrival_steps is None
+                    else [int(a) for a in arrival_steps])
+        if len(arrivals) != R:
+            raise ValueError(
+                f"{len(arrivals)} arrival steps for {R} requests")
+        for prompt, m in reqs:
+            if prompt.size < 1:
+                raise ValueError("empty prompt")
+            if m < 1:
+                raise ValueError(f"n_new must be >= 1, got {m}")
+            if prompt.size - 1 + m > scfg.max_len:
+                raise ValueError(
+                    f"prompt ({prompt.size}) + n_new ({m}) exceeds "
+                    f"max_len {scfg.max_len}")
+
+        step_fn = self._get_ragged_step()
+        B = scfg.batch
+        cache = jax.device_put(init_cache(self.cfg, B, scfg.max_len),
+                               to_shardings(self.cspecs, self.mesh))
+        tok = jax.device_put(jnp.zeros((B, 1), jnp.int32),
+                             self._tok_sharding)
+        pos_b = jnp.zeros((B,), jnp.int32)
+        active = jnp.zeros((B,), jnp.int32)
+        key = jax.random.key(scfg.seed)
+        idx = jnp.zeros((), jnp.int32)
+
+        slots: List[Optional[Dict[str, int]]] = [None] * B
+        free = list(range(B))
+        order = sorted(range(R), key=lambda r: (arrivals[r], r))
+        queue: collections.deque = collections.deque()
+        step_log: List[Tuple[Any, List[Tuple[int, int]]]] = []
+        t = 0
+        pi = 0
+        while pi < R or queue or any(s is not None for s in slots):
+            while pi < R and arrivals[order[pi]] <= t:
+                queue.append(order[pi])
+                pi += 1
+            # prefill-insert: refill free slots from the queue
+            while queue and free:
+                r = queue.popleft()
+                j = free.pop(0)
+                cache, tok, pos_b, active = self._insert(
+                    cache, tok, pos_b, active, j, reqs[r][0])
+                slots[j] = {"req": r, "remaining": reqs[r][1]}
+            if all(s is None for s in slots):
+                t = arrivals[order[pi]]     # batch idle: skip to next arrival
+                continue
+            # one resident decode step advances every occupied slot
+            job = self._dispatch_begin()
+            tok, pos_b, key, idx, cache = step_fn(
+                self.params, cache, tok, pos_b, active, key, idx)
+            live = [(j, s["req"]) for j, s in enumerate(slots)
+                    if s is not None]
+            self._dispatch_end(job, tokens=len(live))
+            step_log.append((tok, live))
+            for j, s in enumerate(slots):
+                if s is None:
+                    continue
+                s["remaining"] -= 1
+                if s["remaining"] == 0:     # done-mask: retire the slot
+                    slots[j] = None
+                    free.append(j)
+                    free.sort()
+                    active = active.at[j].set(0)
+                    self.stats["requests_retired"] += 1
+            t += 1
+
+        # tokens stayed device-resident throughout; one drain at the end
+        fetched = jax.device_get([tk for tk, _ in step_log])
+        results: List[List[int]] = [[] for _ in range(R)]
+        for tk_host, (_, live) in zip(fetched, step_log):
+            for j, r in live:
+                results[r].append(tk_host[j, 0])
+        return [np.asarray(seq, np.int32) for seq in results]
+
+    def _insert(self, cache, tok, pos_b, active, slot: int,
+                prompt: np.ndarray):
+        """Admit ``prompt`` into ``slot``: bucketed prefill of
+        ``prompt[:-1]`` scattered into the slot's cache rows; the last
+        prompt token becomes the slot's pending decode token at position
+        ``len(prompt) - 1``."""
+        s = int(prompt.size)
+        if s > 1:
+            bucket = max(1, self.scfg.prefill_bucket)
+            # bucketed up, but never past the cache length
+            sb = min(-(-(s - 1) // bucket) * bucket, self.scfg.max_len)
+            padded = np.zeros((1, sb), np.int32)
+            padded[0, :s - 1] = prompt[:-1]
+            _, pcache = self._get_prefill_fn()(self.params,
+                                               jnp.asarray(padded))
+            cache = self._get_insert_fn()(cache, pcache["k"], pcache["v"],
+                                          np.int32(slot))
+        tok = tok.at[slot, 0].set(int(prompt[-1]))
+        self.stats["h2d_token_puts"] += 1   # the pending prompt token
+        pos_b = pos_b.at[slot].set(s - 1)
+        active = active.at[slot].set(1)
+        self.stats["prefill_inserts"] += 1
+        return cache, tok, pos_b, active
 
     # -- completion accounting (one offloaded job per dispatch) -------------------
 

@@ -1,0 +1,208 @@
+"""OffloadStream + fused dispatch batching.
+
+The window/out-of-order-completion logic is host-side (CompletionUnit), so
+the property tests run in-process on the default single device (n=1
+cluster); multi-device pipelining and the fused-batch HLO structure run in
+8-device subprocesses.
+"""
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import jobs
+from repro.core.offload import OffloadConfig, OffloadRuntime
+from repro.core.stream import OffloadStream
+
+_K = 6
+_JOB = jobs.make_axpy(64)
+_INSTS, _EXPECTED = jobs.make_instances(_JOB, _K, seed0=7)
+
+# module-scope runtimes so the 12 property examples share warm plans
+_RT = {
+    False: OffloadRuntime(n_units=4),
+    True: OffloadRuntime(config=OffloadConfig(donate_operands=True),
+                         n_units=4),
+}
+_STREAMS = {d: OffloadStream(_RT[d], _JOB, n=1) for d in (False, True)}
+_BASELINE = {}
+
+
+def _baseline(donate: bool):
+    if donate not in _BASELINE:
+        rt = OffloadRuntime(
+            config=OffloadConfig(donate_operands=donate))
+        _BASELINE[donate] = [rt.offload(_JOB, ops, n=1).wait()
+                             for ops in _INSTS]
+    return _BASELINE[donate]
+
+
+@settings(max_examples=12, deadline=None)
+@given(order=st.permutations(list(range(_K))),
+       donate=st.sampled_from([False, True]))
+def test_stream_out_of_order_wait_matches_sequential(order, donate):
+    """Property: any wait order over a full stream window (including with
+    donate_operands=True) yields the sequential results, drains every
+    completion cause, and never corrupts plan residency."""
+    baseline = _baseline(donate)
+    rt, stream = _RT[donate], _STREAMS[donate]
+    # prime plan residency independently of the stream's slot staging
+    rt.offload(_JOB, _INSTS[0], n=1).wait()
+
+    handles = [stream.submit(ops) for ops in _INSTS]
+    results = {i: handles[i].wait() for i in order}
+    for i in range(_K):
+        assert np.array_equal(results[i], baseline[i]), (i, order, donate)
+    assert rt.unit.outstanding() == {}          # all causes drained
+    assert stream.inflight == 0 or stream.inflight <= stream.window
+
+    # residency untouched by slot staging: the resident redispatch still
+    # returns instance 0's result
+    res = rt.offload(_JOB, "resident", n=1).wait()
+    assert np.array_equal(res, baseline[0]), (order, donate)
+
+
+def test_stream_window_bounded_by_completion_units():
+    rt = OffloadRuntime(n_units=2)
+    stream = OffloadStream(rt, _JOB, n=1)
+    assert stream.window == 2
+    handles = [stream.submit(ops) for ops in _INSTS]
+    # 6 submits through a 2-deep window force 4 stalls, never > 2 in flight
+    assert stream.stats["window_stalls"] == _K - 2
+    assert stream.inflight <= 2
+    out = stream.drain()
+    assert stream.inflight == 0
+    assert len(out) == 2                        # the still-in-flight tail
+    for h, exp in zip(handles, _EXPECTED):
+        assert np.allclose(h.wait(), exp, rtol=1e-4, atol=1e-5)
+
+
+def test_stream_resident_submit():
+    """submit("resident") pipelines the zero-staging redispatch; before
+    any plan/residency exists it fails loudly."""
+    rt = OffloadRuntime(n_units=4)
+    rt.offload(_JOB, _INSTS[0], n=1).wait()
+    stream = OffloadStream(rt, _JOB, n=1)
+    puts = rt.stats.device_puts
+    handles = [stream.submit("resident") for _ in range(5)]
+    baseline = _baseline(False)
+    for h in handles:
+        assert np.array_equal(h.wait(), baseline[0])
+    assert rt.stats.device_puts == puts          # zero uploads
+    fresh = OffloadStream(OffloadRuntime(), _JOB, n=1)
+    try:
+        fresh.submit("resident")
+        raise AssertionError("expected KeyError without a primed plan")
+    except KeyError:
+        pass
+
+
+def test_stream_rejects_bad_depth_and_window_cap():
+    rt = OffloadRuntime(n_units=4)
+    for bad in (dict(depth=0), dict(window=0), dict(window=-1)):
+        try:
+            OffloadStream(rt, _JOB, n=1, **bad)
+            raise AssertionError(f"expected ValueError for {bad}")
+        except ValueError:
+            pass
+    assert OffloadStream(rt, _JOB, n=1, window=64).window == 4
+
+
+def test_stream_pipelined_multi_device(subproc):
+    """8-device stream: zero recompiles/plan rebuilds while pipelining,
+    double-buffer staging counts, results equal fresh offloads."""
+    subproc("""
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime
+from repro.core.stream import OffloadStream
+
+job = jobs.make_axpy(2048)
+insts, exps = jobs.make_instances(job, 10, seed0=3)
+rt = OffloadRuntime(n_units=4)
+stream = OffloadStream(rt, job, n=8)
+res = stream.map(insts)
+compiled = len(rt._compiled)
+misses = rt.plan_misses
+res2 = stream.map(list(reversed(insts)))
+assert len(rt._compiled) == compiled        # zero recompiles while streaming
+assert rt.plan_misses == misses             # one plan for the whole stream
+for r, e in zip(res, exps):
+    assert np.allclose(r, e, rtol=1e-9, atol=1e-9)
+for r, e in zip(res2, reversed(exps)):
+    assert np.allclose(r, e, rtol=1e-9, atol=1e-9)
+# every submit staged its own operands (x, y) into a slot: 2 puts/job
+assert rt.stats.device_puts == 2 * 20 + 1   # + the args upload
+assert stream.stats["submitted"] == 20
+assert rt.unit.outstanding() == {}
+print("OK")
+""")
+
+
+def test_fused_dispatch_batching_all_kernels(subproc):
+    """offload_fused(B) == B sequential offloads for every paper kernel;
+    one completion-unit program per fused launch."""
+    subproc("""
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime
+
+rt = OffloadRuntime()
+for name, mk in jobs.PAPER_JOBS.items():
+    job = mk() if name != "bfs" else mk(64)
+    insts, exps = jobs.make_instances(job, 4, seed0=1)
+    seq = [rt.offload(job, ops, n=4).wait() for ops in insts]
+    fused = rt.offload_fused(job, insts, n=4).wait_each()
+    for s, f, e in zip(seq, fused, exps):
+        assert np.array_equal(s, f), name            # bit-for-bit vs serial
+        assert np.allclose(f, e, rtol=1e-9, atol=1e-9), name
+assert rt.unit.outstanding() == {}
+print("OK")
+""")
+
+
+def test_fused_hlo_collectives_independent_of_B(subproc):
+    """The fused program's collective count must not grow with B — the
+    whole point of batching under one launch (O(1) wakeup analogue)."""
+    subproc("""
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime, count_collectives
+
+rt = OffloadRuntime()
+for mk in (jobs.make_axpy, jobs.make_atax, jobs.make_montecarlo):
+    job = mk()
+    c1 = count_collectives(rt.lowered_text(job, 8))
+    c2 = count_collectives(rt.lowered_text(job, 8, fuse=2))
+    c8 = count_collectives(rt.lowered_text(job, 8, fuse=8))
+    assert c2 == c8, (job.spec.name, c2, c8)
+    # fused launch adds no collective kinds over the single-job program
+    for kind, n in c8.items():
+        assert n <= max(c1[kind], 1), (job.spec.name, kind, c1, c8)
+# the text cache returns the identical object on repeat queries
+t = rt.lowered_text(jobs.make_axpy(), 8, fuse=8)
+assert t is rt.lowered_text(jobs.make_axpy(), 8, fuse=8)
+print("OK")
+""")
+
+
+def test_fused_resident_and_donation(subproc):
+    """Resident fused redispatch under donate_operands self-heals exactly
+    like the single-job plan."""
+    subproc("""
+import numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadConfig, OffloadRuntime
+
+rt = OffloadRuntime(config=OffloadConfig(donate_operands=True))
+job = jobs.make_axpy(1024)
+insts, exps = jobs.make_instances(job, 4, seed0=2)
+r0 = rt.offload_fused(job, insts, n=8).wait()
+r1 = rt.offload_fused(job, "resident", batch=4, n=8).wait()
+r2 = rt.offload_fused(job, "resident", batch=4, n=8).wait()
+assert np.array_equal(r0, r1) and np.array_equal(r1, r2)
+for i, e in enumerate(exps):
+    assert np.allclose(r0[i], e)
+assert rt.stats.fused_jobs == 3 * 4
+assert len(rt._compiled) == 1               # one fused program, ever
+print("OK")
+""")
