@@ -30,6 +30,22 @@ Subprocess-isolated measurements (the bench process keeps 1 device):
   fixed-batch ``generate`` calls vs continuous-batching ``generate_many``
   under a Poisson-ish arrival trace of variable-length prompts.
 
+* **staging sweep** (``staging_wall``) — real-runtime phase-E staging of a
+  32 MiB replicated operand through ``DispatchPlan.stage`` for n ∈
+  {1, 2, 4, 8} clusters, ``host_fanout`` (the O(n) sequential host-link
+  baseline) vs ``tree`` (hierarchical broadcast staging), cold and warm,
+  with the exact ``h2d_bytes``/``d2d_bytes`` counters per point.  A
+  :class:`~repro.core.simulator.StagingCostModel` is calibrated from the
+  warm host-fanout n ∈ {1, 2} and tree n=4 points and its predictions are
+  recorded against every measurement as ``model_residual`` rows.  These
+  rows are deliberately *not* named ``model_error``: the CPU test
+  substrate's host link is parallel and cache-dominated (copies of a hot
+  source can be near-free, device-to-device transfers take an unoptimized
+  path), so wallclock residuals carry tens of percent of machine noise —
+  the paper's <15 % bar is enforced where its serial-link premise holds,
+  on the deterministic ``staging`` suite's ``model_error`` rows
+  (``benchmarks/staging.py``, wired into CI).
+
 Each suite returns printable rows; the raw nested dict is kept on the
 function's ``last_raw`` for ``benchmarks/run.py --json``.
 """
@@ -308,6 +324,57 @@ print(json.dumps(out))
 """
 
 
+_STAGING_CHILD = """
+import json, time
+import jax, numpy as np
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime
+
+# One big replicated operand (the covariance data matrix, broadcast class):
+# 32 MiB stays bandwidth-bound — well past the cache sizes below which this
+# substrate's host "link" degenerates into near-free hot-cache copies.
+M_, N_ = 512 * 32, 256
+job = jobs.make_covariance(M_, N_)
+operands = {"data": np.random.default_rng(0).standard_normal((M_, N_))}
+SIZE = operands["data"].nbytes
+ITERS = 11
+rt = OffloadRuntime()
+out = {"size_bytes": SIZE, "sweep": {}}
+
+for n in (1, 2, 4, 8):
+    plan = rt.plan(job, operands, n=n)
+    entry = {}
+    for mode in ("host_fanout", "tree"):
+        h0, d0 = plan.stats.h2d_bytes, plan.stats.d2d_bytes
+        ts = []
+        cold_ms = None
+        for i in range(ITERS + 1):
+            t0 = time.perf_counter()
+            staged = plan.stage(operands, via=mode)
+            jax.block_until_ready(list(staged.values()))
+            dt = (time.perf_counter() - t0) * 1e3
+            if i == 0:
+                cold_ms = dt
+            else:
+                ts.append(dt)
+            # drop the buffers between iterations: a flat memory profile,
+            # so late sweep points don't pay allocator pressure the early
+            # ones dodged (and the byte counters stay per-call exact)
+            del staged
+            plan.invalidate()
+        h2d = (plan.stats.h2d_bytes - h0) // (ITERS + 1)
+        d2d = (plan.stats.d2d_bytes - d0) // (ITERS + 1)
+        entry[mode] = {
+            "cold_ms": cold_ms,
+            "warm_ms": min(ts),   # least-interference sample on a noisy VM
+            "h2d_bytes": h2d,
+            "d2d_bytes": d2d,
+        }
+    out["sweep"][str(n)] = entry
+print(json.dumps(out))
+"""
+
+
 def _run_child(code: str, timeout: int = 570, x64: bool = True) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -450,3 +517,65 @@ def serve_throughput() -> Tuple[List[Row], str]:
 
 
 serve_throughput.last_raw = {}
+
+
+def staging_wall() -> Tuple[List[Row], str]:
+    """Staging sweep: host_fanout vs tree wallclock + calibrated model."""
+    from repro.core.simulator import StagingCostModel, model_error
+
+    rows: List[Row] = []
+    data = _run_child(_STAGING_CHILD)
+    sweep = data["sweep"]
+    for n, entry in sorted(sweep.items(), key=lambda kv: int(kv[0])):
+        for mode, d in entry.items():
+            base = f"staging_wall/cov32MiB/{mode}/n={n}"
+            rows.append((f"{base}/cold", d["cold_ms"] * 1e3, "us"))
+            rows.append((f"{base}/warm", d["warm_ms"] * 1e3, "us"))
+            rows.append((f"{base}/h2d", d["h2d_bytes"], "bytes"))
+            rows.append((f"{base}/d2d", d["d2d_bytes"], "bytes"))
+
+    # Calibrate the substrate cost model (host-fanout n in {1, 2} isolate
+    # one upload; tree n=4 averages the edge cost over 3 edges) and record
+    # measured-vs-predicted per point.  Residual rows are informational on
+    # this substrate — see the module docstring; the <15% bar binds the
+    # deterministic `staging` suite's model_error rows.  A hot-cache run
+    # can measure hf2 <= hf1 (near-free copies), which is uncalibratable —
+    # keep the measured rows and skip the residuals rather than fail.
+    errs = {}
+    try:
+        cm = StagingCostModel.calibrate(
+            hf1=sweep["1"]["host_fanout"]["warm_ms"],
+            hf2=sweep["2"]["host_fanout"]["warm_ms"],
+            tree_k=sweep["4"]["tree"]["warm_ms"], k=4,
+        )
+    except ValueError as e:
+        cm = None
+        rows.append(("staging_wall/cov32MiB/uncalibratable", 1.0, repr(e)[:80]))
+    if cm is not None:
+        for n, entry in sweep.items():
+            for mode, d in entry.items():
+                err = model_error(cm.predict(mode, int(n)), d["warm_ms"])
+                errs[f"{mode}/n={n}"] = err
+                rows.append((f"staging_wall/cov32MiB/{mode}/n={n}/"
+                             "model_residual", err * 100, "percent"))
+    hf8 = sweep["8"]["host_fanout"]["warm_ms"]
+    tree8 = sweep["8"]["tree"]["warm_ms"]
+    rows.append(("staging_wall/cov32MiB/tree_vs_hf/n=8",
+                 hf8 / max(tree8, 1e-9), "speedup"))
+    h2d_ratio = (sweep["8"]["host_fanout"]["h2d_bytes"]
+                 / sweep["8"]["tree"]["h2d_bytes"])
+    residual_note = (
+        f"calibrated-model worst residual {max(errs.values()) * 100:.1f}% "
+        "(substrate-noisy; the <15% bar binds the deterministic staging "
+        "suite)" if errs else
+        "cost model uncalibratable this run (hot-cache measurements)")
+    derived = (
+        f"tree {tree8:.1f}ms vs host_fanout {hf8:.1f}ms at n=8 "
+        f"({hf8 / tree8:.2f}x, 32MiB operand); tree h2d is 1 upload at "
+        f"every n (host_fanout moves {h2d_ratio:.0f}x the host-link bytes "
+        f"at n=8); " + residual_note)
+    staging_wall.last_raw = data
+    return rows, derived
+
+
+staging_wall.last_raw = {}

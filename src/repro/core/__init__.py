@@ -1,6 +1,14 @@
 """The paper's contribution: multicast offload runtime, job completion unit,
 cycle-accurate phase simulator, and the analytical offload-runtime model."""
 
+from repro.core.broadcast import (
+    BroadcastTree,
+    TreeStager,
+    build_tree,
+    depth_bound,
+    place_pytree,
+    tree_from_request,
+)
 from repro.core.completion import CompletionUnit
 from repro.core.jobs import PAPER_JOBS, PaperJob, make_instances, stack_instances
 from repro.core.model import (
@@ -33,18 +41,34 @@ from repro.core.offload import (
 from repro.core.stream import OffloadStream
 from repro.core.params import DEFAULT_PARAMS, OccamyParams
 from repro.core.phases import Phase, PhaseStats
-from repro.core.simulator import JobSpec, SimResult, offload_overhead, simulate, speedups
+from repro.core.simulator import (
+    JobSpec,
+    SimResult,
+    StagingCostModel,
+    model_error,
+    offload_overhead,
+    simulate,
+    simulate_staging,
+    speedups,
+    staging_model,
+    staging_model_error,
+)
 
 __all__ = [
-    "AddressMap", "CompletionUnit", "DEFAULT_PARAMS", "DispatchPlan",
+    "AddressMap", "BroadcastTree", "CompletionUnit", "DEFAULT_PARAMS",
+    "DispatchPlan",
     "FusedHandle", "JobHandle", "JobSpec",
     "MulticastRequest", "OccamyParams", "OffloadConfig", "OffloadRuntime",
     "OffloadStream", "PlanStats",
     "PAPER_JOBS", "PaperJob", "Phase", "PhaseStats", "SimResult",
+    "StagingCostModel", "TreeStager",
     "atax_closed_form_paper", "axpy_closed_form", "count_collectives",
-    "decode_cluster_selection", "decode_match", "encode_cluster_selection",
-    "encode_cluster_selection_multi", "make_instances", "offload_overhead",
+    "build_tree", "decode_cluster_selection", "decode_match",
+    "depth_bound", "encode_cluster_selection",
+    "encode_cluster_selection_multi", "make_instances", "model_error",
+    "offload_overhead", "place_pytree",
     "optimal_clusters",
     "predict", "predict_total", "predict_total_v2", "should_offload",
-    "simulate", "speedups", "stack_instances", "validate",
+    "simulate", "simulate_staging", "speedups", "stack_instances",
+    "staging_model", "staging_model_error", "tree_from_request", "validate",
 ]

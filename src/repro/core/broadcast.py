@@ -1,0 +1,277 @@
+"""Hierarchical broadcast staging — lowering the multicast selection to a
+data path (the last O(n) segment of the dispatch critical path).
+
+The paper's NoC multicast (§4.2) turns O(n) point-to-point *job-information*
+writes into one logical broadcast, and :mod:`repro.core.multicast` reproduces
+its address-mask selection algebra.  But that algebra only ever *selected*
+clusters here; replicated **operands** (phase E) still crossed the host link
+once per destination — ``jax.device_put(arr, replicated_sharding)`` is n
+host->device transfers in a trench coat.  Colagrande & Benini
+(arXiv:2404.01908) show operand communication dominates offload overhead for
+data-heavy jobs, and Zuckerman et al. (arXiv:2407.04182) argue the fan-out
+topology should be *derived from the platform hierarchy* rather than
+flattened.  This module does exactly that:
+
+* :func:`build_tree` derives a **quadrant-aware fan-out tree** from a cluster
+  selection: a binomial (recursive-doubling) broadcast first across the
+  selected quadrants' representatives, then — all quadrants in parallel —
+  across each quadrant's selected clusters.  Depth is bounded by
+  ``ceil(log2 #quadrants) + ceil(log2 max clusters/quadrant)``, mirroring the
+  two-level address split of fig. 5 (quadrant bits above cluster bits).
+* :func:`tree_from_request` derives the tree straight from a
+  :class:`~repro.core.multicast.MulticastRequest` — the (addr, mask) pair *is*
+  the fan-out specification; the tree reaches exactly the clusters the
+  request decodes to.
+* :class:`TreeStager` executes the tree as a staging data path: the operand
+  crosses the host link **once** (a single-device ``device_put`` to the tree
+  root), then fans out device-to-device along the tree levels (each level one
+  batched ``device_put``), and the per-device buffers are assembled into the
+  replicated jax array the compiled program expects.  Host-link bytes drop
+  from O(n)·size to O(1)·size; the d2d copies ride the accelerator
+  interconnect instead.  A *replicated-resharding fast path*
+  (``reshard=True``) hands the fan-out to the runtime in one call — upload
+  to the root, then ``device_put`` the committed buffer straight to the
+  replicated sharding (XLA lowers it to its own broadcast, typically an
+  all-gather-style tree) — for sub-meshes where that is supported.
+
+Byte accounting: every entry point takes an optional ``stats`` object with
+``h2d_bytes`` / ``d2d_bytes`` counters (duck-typed —
+:class:`repro.core.offload.PlanStats` qualifies) so the O(n) -> O(1)
+host-link claim is *asserted*, not just timed.  The counters are the
+**logical link bytes of the staging strategy** — what the strategy moves
+over each link class — independent of substrate-level copy elision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import multicast as mc
+
+Edge = Tuple[int, int]          # (src cluster id, dst cluster id)
+
+#: every replicated-placement strategy the runtime understands (the single
+#: source of truth — ``repro.core.offload`` re-exports it, the serve engine
+#: accepts the non-baseline subset)
+STAGING_MODES = ("direct", "host_fanout", "tree", "tree_reshard")
+#: the strategies that route through the fan-out tree
+TREE_MODES = ("tree", "tree_reshard")
+#: the two explicit data-path strategies the staging cost model covers
+DATA_PATH_MODES = ("host_fanout", "tree")
+
+
+@dataclasses.dataclass(frozen=True)
+class BroadcastTree:
+    """A levelled fan-out tree over a cluster selection.
+
+    ``levels[k]`` holds the (src, dst) copies of step k; all edges of a
+    level are independent (no node appears twice in one level, and every
+    source already holds the data), so a level is one parallel round of
+    transfers.  Every selected cluster is reached exactly once: the tree
+    has ``len(clusters) - 1`` edges and each non-root node one parent.
+    """
+
+    clusters: Tuple[int, ...]                      # sorted selection
+    root: int
+    levels: Tuple[Tuple[Edge, ...], ...]
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels)
+
+    @property
+    def edges(self) -> Tuple[Edge, ...]:
+        return tuple(e for level in self.levels for e in level)
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.clusters) - 1
+
+    def parents(self) -> Dict[int, int]:
+        """dst -> src over every edge (each dst appears exactly once)."""
+        return {d: s for s, d in self.edges}
+
+    def reached(self) -> Tuple[int, ...]:
+        """Every cluster the broadcast covers (root + all edge dsts)."""
+        return tuple(sorted({self.root} | {d for _, d in self.edges}))
+
+
+def depth_bound(cluster_ids: Iterable[int],
+                clusters_per_quadrant: int = mc.CLUSTERS_PER_QUADRANT) -> int:
+    """``ceil(log2 Q) + ceil(log2 C_max)`` for a selection: the fig.-5 bound
+    (Q = selected quadrants, C_max = most clusters selected in one quadrant).
+    """
+    by_q: Dict[int, int] = {}
+    for c in set(cluster_ids):
+        by_q[c // clusters_per_quadrant] = by_q.get(c // clusters_per_quadrant, 0) + 1
+    if not by_q:
+        return 0
+    return (math.ceil(math.log2(len(by_q)))
+            + math.ceil(math.log2(max(by_q.values()))))
+
+
+def _binomial_rounds(have: List[int], todo: List[int]) -> List[List[Edge]]:
+    """Recursive-doubling rounds: every holder forwards to one receiver."""
+    rounds: List[List[Edge]] = []
+    while todo:
+        edges: List[Edge] = []
+        for src in list(have):
+            if not todo:
+                break
+            dst = todo.pop(0)
+            edges.append((src, dst))
+            have.append(dst)
+        rounds.append(edges)
+    return rounds
+
+
+def build_tree(cluster_ids: Iterable[int],
+               clusters_per_quadrant: int = mc.CLUSTERS_PER_QUADRANT
+               ) -> BroadcastTree:
+    """Derive the quadrant-aware fan-out tree for a cluster selection.
+
+    Phase 1 broadcasts across quadrant representatives (the lowest selected
+    cluster of each quadrant), phase 2 broadcasts within every quadrant in
+    parallel.  Works for any non-empty selection — degenerate n=1 (no
+    edges) and non-power-of-two selections included.
+    """
+    ids = sorted(set(int(c) for c in cluster_ids))
+    if not ids:
+        raise ValueError("empty cluster selection")
+    if ids[0] < 0:
+        raise ValueError(f"negative cluster id {ids[0]}")
+    by_q: Dict[int, List[int]] = {}
+    for c in ids:
+        by_q.setdefault(c // clusters_per_quadrant, []).append(c)
+    reps = [members[0] for _, members in sorted(by_q.items())]
+    root = ids[0]                     # lowest id == its quadrant's rep
+    assert root in reps
+    inter = _binomial_rounds([root], [r for r in reps if r != root])
+    # Phase 2: all quadrants fan out in parallel — one binomial broadcast
+    # per quadrant, merged round-wise into shared levels.
+    per_q = [_binomial_rounds([members[0]], members[1:])
+             for _, members in sorted(by_q.items())]
+    intra = [sum(rounds, []) for rounds in
+             itertools.zip_longest(*per_q, fillvalue=[])]
+    levels = tuple(tuple(lv) for lv in inter + intra if lv)
+    return BroadcastTree(tuple(ids), root, levels)
+
+
+def tree_from_request(req: mc.MulticastRequest,
+                      num_clusters: int = mc.NUM_CLUSTERS,
+                      clusters_per_quadrant: int = mc.CLUSTERS_PER_QUADRANT
+                      ) -> BroadcastTree:
+    """The fan-out tree of an address-mask multicast request (fig. 5)."""
+    ids = mc.decode_cluster_selection(req, num_clusters)
+    if not ids:
+        raise ValueError(f"request {req} selects no clusters")
+    return build_tree(ids, clusters_per_quadrant)
+
+
+# ---------------------------------------------------------------------------
+# The staging data path.
+# ---------------------------------------------------------------------------
+
+
+class TreeStager:
+    """Executes a :class:`BroadcastTree` as a replicated-operand data path.
+
+    ``devices[i]`` realizes ``cluster_ids[i]``; the stager uploads once to
+    the root's device and fans out level by level.  One stager per
+    (selection, device set) — plans and engines cache it.
+    """
+
+    def __init__(self, devices: Sequence[jax.Device],
+                 cluster_ids: Optional[Sequence[int]] = None,
+                 clusters_per_quadrant: int = mc.CLUSTERS_PER_QUADRANT):
+        ids = (list(range(len(devices))) if cluster_ids is None
+               else [int(c) for c in cluster_ids])
+        if len(ids) != len(devices):
+            raise ValueError(
+                f"{len(ids)} cluster ids for {len(devices)} devices")
+        self.tree = build_tree(ids, clusters_per_quadrant)
+        self._dev: Dict[int, jax.Device] = dict(zip(ids, devices))
+        self._order = list(ids)       # device order of the sub-mesh
+
+    def put_replicated(self, arr: np.ndarray, sharding,
+                       *, reshard: bool = False,
+                       stats: Optional[Any] = None):
+        """Stage ``arr`` replicated onto the sub-mesh with ONE host upload.
+
+        ``sharding`` must be a fully-replicated sharding over exactly the
+        stager's devices.  ``reshard=True`` takes the replicated-resharding
+        fast path (root upload + one resharding ``device_put``); the
+        default walks the explicit tree.  ``stats.h2d_bytes`` grows by
+        ``arr.nbytes`` and ``stats.d2d_bytes`` by ``(n-1) * arr.nbytes``
+        either way — the logical link bytes of the strategy.
+        """
+        arr = np.asarray(arr)
+        n = len(self._order)
+        root_dev = self._dev[self.tree.root]
+        buf = jax.device_put(arr, root_dev)
+        if stats is not None:
+            stats.h2d_bytes += arr.nbytes
+            stats.d2d_bytes += arr.nbytes * (n - 1)
+        if n == 1:
+            return jax.make_array_from_single_device_arrays(
+                arr.shape, sharding, [buf])
+        if reshard:
+            return jax.device_put(buf, sharding)
+        bufs = {self.tree.root: buf}
+        for level in self.tree.levels:
+            srcs = [bufs[s] for s, _ in level]
+            dsts = [self._dev[d] for _, d in level]
+            out = jax.device_put(srcs, dsts)     # one parallel round
+            for (_, d), b in zip(level, out):
+                bufs[d] = b
+        return jax.make_array_from_single_device_arrays(
+            arr.shape, sharding, [bufs[c] for c in self._order])
+
+
+def is_replicated(sharding) -> bool:
+    """True iff ``sharding`` places the full array on every device."""
+    spec = getattr(sharding, "spec", None)
+    if spec is None:
+        return False
+    return all(p is None for p in spec)
+
+
+def placement_bytes(arr: np.ndarray, sharding) -> int:
+    """Logical host-link bytes of a *direct* ``device_put``: per-device
+    shard bytes × device count.  A fully replicated array costs n·size; a
+    model-sharded-but-data-replicated parameter costs size × (data
+    replicas); a fully sharded operand costs exactly size."""
+    arr = np.asarray(arr)
+    shard = sharding.shard_shape(tuple(arr.shape))
+    per = int(np.prod(shard, dtype=np.int64)) * arr.dtype.itemsize
+    return per * len(sharding.device_set)
+
+
+def place_pytree(tree: Any, shardings: Any, stager: TreeStager,
+                 *, reshard: bool = False, stats: Optional[Any] = None) -> Any:
+    """``device_put`` a pytree, routing replicated leaves through the tree.
+
+    Sharded leaves cross the host link once regardless of n (each device
+    receives only its shard), so they take the direct path; replicated
+    leaves — the O(n) host-link offenders — go through
+    :meth:`TreeStager.put_replicated`.  ``stats`` counts both classes.
+    """
+    def place(leaf, sharding):
+        arr = np.asarray(leaf)
+        if is_replicated(sharding):
+            return stager.put_replicated(arr, sharding, reshard=reshard,
+                                         stats=stats)
+        # partially-replicated leaves (e.g. model-sharded, data-replicated
+        # parameters) still take the direct path; only the fully replicated
+        # class is tree-staged today
+        if stats is not None:
+            stats.h2d_bytes += placement_bytes(arr, sharding)
+        return jax.device_put(leaf, sharding)
+
+    return jax.tree_util.tree_map(place, tree, shardings)

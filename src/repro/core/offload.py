@@ -83,9 +83,27 @@ buffer slot without touching residency, so job k+1's phase-E transfer can
 proceed while job k computes out of the other slot) and ``_launch`` (the
 dispatch tail shared by ``offload``/``offload_fused``/the stream).
 
+Hierarchical broadcast staging
+------------------------------
+
+Replicated operands used to be the last O(n) segment of the dispatch path:
+``device_put`` against a replicated sharding moves the array over the host
+link once *per cluster*.  ``DispatchPlan.stage(..., via="tree")`` instead
+derives a quadrant-aware fan-out tree from the cluster selection
+(:mod:`repro.core.broadcast`) and stages the operand with **one** host
+upload to the tree root plus device-to-device copies along the tree — the
+paper's multicast algebra lowered to a phase-E data path.  ``via=
+"host_fanout"`` keeps the explicit O(n) sequential-upload baseline
+measurable, and ``OffloadConfig.staging`` sets the per-runtime default.
+``stats.h2d_bytes`` / ``stats.d2d_bytes`` account the logical link bytes so
+the O(n) -> O(1) host-link claim is asserted by tests, not just timed; the
+staging-cost model in :mod:`repro.core.simulator` (``staging_model`` /
+``model_error``) closes the loop against the paper's §6 analytical
+treatment.
+
 ``DispatchPlan.stats`` / ``OffloadRuntime.stats`` count device_puts, plan
-hits/misses, and resident hits — the hooks the fast-path tests and
-``benchmarks/offload_wallclock.py`` assert against.
+hits/misses, resident hits, and staging bytes — the hooks the fast-path
+tests and ``benchmarks/offload_wallclock.py`` assert against.
 """
 
 from __future__ import annotations
@@ -100,6 +118,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import broadcast as bc
 from repro.core import multicast as mc
 from repro.core.completion import (
     CompletionUnit,
@@ -114,6 +133,24 @@ AXIS = "clusters"
 RESIDENT = "resident"
 
 
+#: valid phase-E staging strategies for replicated operands (see
+#: ``DispatchPlan.stage``; the canonical set lives in ``repro.core.
+#: broadcast``):
+#:   "direct"       one ``device_put`` against the replicated sharding — the
+#:                  substrate's native path (O(n) logical host-link bytes)
+#:   "host_fanout"  explicit sequential per-device uploads, one outstanding
+#:                  transfer at a time — the measurable O(n) host-link
+#:                  baseline, mirroring the paper's serialized P2P writes
+#:                  (CVA6's limited outstanding-write budget, §4.2)
+#:   "tree"         hierarchical broadcast staging: ONE host upload to the
+#:                  fan-out tree root, then device-to-device copies along
+#:                  the quadrant-aware tree (``repro.core.broadcast``) —
+#:                  O(1) host-link bytes
+#:   "tree_reshard" tree semantics through the replicated-resharding fast
+#:                  path (root upload + one resharding ``device_put``)
+STAGING_MODES = bc.STAGING_MODES
+
+
 @dataclasses.dataclass(frozen=True)
 class OffloadConfig:
     """First-class framework feature: how jobs are dispatched (§4.2/§4.3)."""
@@ -121,6 +158,12 @@ class OffloadConfig:
     info_dist: str = "multicast"       # "multicast" | "p2p_chain"
     completion: str = "unit"           # "unit" | "central_counter"
     donate_operands: bool = False
+    staging: str = "direct"            # default phase-E mode, see STAGING_MODES
+
+    def __post_init__(self):
+        if self.staging not in STAGING_MODES:
+            raise ValueError(
+                f"staging {self.staging!r} not in {STAGING_MODES}")
 
     @staticmethod
     def baseline() -> "OffloadConfig":
@@ -141,6 +184,9 @@ class PlanStats:
     dispatches: int = 0           # XLA launches through this plan
     donation_restages: int = 0    # re-uploads forced by a donated dispatch
     fused_jobs: int = 0           # logical jobs carried by fused dispatches
+    h2d_bytes: int = 0            # logical host-link bytes (see broadcast.py)
+    d2d_bytes: int = 0            # logical device-to-device fan-out bytes
+    tree_stages: int = 0          # operand/arg stagings routed via the tree
 
 
 @dataclasses.dataclass
@@ -244,6 +290,9 @@ class DispatchPlan:
         self._slots: Dict[int, Dict[str, Any]] = {}  # stream staging slots
         self._args_val: Optional[np.ndarray] = None
         self._args_dev: Any = None
+        self._devices = list(devices)
+        self._stager: Optional[bc.TreeStager] = None   # built lazily
+        self._staged_via: str = runtime.config.staging  # residency's mode
 
     # -- staging ---------------------------------------------------------------
 
@@ -251,9 +300,55 @@ class DispatchPlan:
     def has_resident(self) -> bool:
         return len(self._resident) == len(self.op_meta) > 0 or not self.op_meta
 
+    def _resolve_via(self, via: Optional[str]) -> str:
+        via = self.runtime.config.staging if via is None else via
+        if via not in STAGING_MODES:
+            raise ValueError(f"staging {via!r} not in {STAGING_MODES}")
+        return via
+
+    def _tree_stager(self) -> bc.TreeStager:
+        if self._stager is None:
+            # one tree per plan: the quadrant-aware fan-out derived from the
+            # cluster selection, shared by every staging (and every job of a
+            # fused batch — the stacked operands ride one tree)
+            self._stager = bc.TreeStager(self._devices, self.cluster_ids)
+        return self._stager
+
+    def _put(self, arr: np.ndarray, sharding: NamedSharding, via: str) -> Any:
+        """One operand/args upload under a staging strategy, bytes counted.
+
+        Sharded arrays cross the host link once regardless of mode (each
+        device receives only its shard); the strategies differ only for
+        replicated arrays — the O(n) host-link offenders.
+        """
+        n = self.n_clusters
+        if not bc.is_replicated(sharding):
+            self.stats.h2d_bytes += arr.nbytes
+            return jax.device_put(arr, sharding)
+        if via in bc.TREE_MODES:
+            self.stats.tree_stages += 1
+            return self._tree_stager().put_replicated(
+                arr, sharding, reshard=(via == "tree_reshard"),
+                stats=self.stats)
+        if via == "host_fanout":
+            # the measurable O(n) baseline: one host->device transfer per
+            # cluster, one outstanding at a time (the serialized host-link
+            # writes of §4.1 — CVA6's outstanding-transaction budget)
+            bufs = []
+            for d in self._devices:
+                b = jax.device_put(arr, d)
+                b.block_until_ready()
+                bufs.append(b)
+            self.stats.h2d_bytes += arr.nbytes * n
+            return jax.make_array_from_single_device_arrays(
+                tuple(arr.shape), sharding, bufs)
+        self.stats.h2d_bytes += arr.nbytes * n
+        return jax.device_put(arr, sharding)
+
     def stage(self, operands: Dict[str, np.ndarray], *,
               _caller_owned: bool = True,
-              slot: Optional[int] = None) -> Dict[str, Any]:
+              slot: Optional[int] = None,
+              via: Optional[str] = None) -> Dict[str, Any]:
         """Phase-E upload of ``operands``.
 
         With ``slot=None`` (default) the buffers become *resident* — the
@@ -262,7 +357,15 @@ class DispatchPlan:
         residency untouched: the double-buffering hook
         :class:`~repro.core.stream.OffloadStream` uses to overlap job k+1's
         upload with job k's compute.
+
+        ``via`` picks the staging strategy for replicated operands (see
+        ``STAGING_MODES``), defaulting to ``OffloadConfig.staging``.  With
+        ``"tree"``, each replicated operand crosses the host link exactly
+        once (to the fan-out tree root) and reaches the remaining clusters
+        through device-to-device copies — ``stats.h2d_bytes`` grows by
+        size, not n·size.
         """
+        via = self._resolve_via(via)
         names = tuple(sorted(operands))
         if names != tuple(name for name, _, _ in self.op_meta):
             raise ValueError(
@@ -278,16 +381,19 @@ class DispatchPlan:
                 raise ValueError(
                     f"operand {name} dtype {arr.dtype} != planned {dtype} "
                     "(a dtype change needs a new plan, not a silent retrace)")
-            staged[name] = jax.device_put(arr, self.op_shardings[name])
+            staged[name] = self._put(arr, self.op_shardings[name], via)
             self.stats.device_puts += 1
             if slot is None:
                 # donation restages from these refs later — snapshot caller
                 # arrays so in-place mutation cannot skew the redo (restages
-                # from our own snapshots skip the copy)
+                # from our own snapshots skip the copy).  One snapshot per
+                # operand at the tree root only: the per-device fan-out
+                # copies live on the devices, never on the host.
                 self._resident_src[name] = (
                     arr.copy() if donating and _caller_owned else arr)
         if slot is None:
             self._resident = staged
+            self._staged_via = via
         else:
             # slot buffers are single-use: each stream submit stages fresh
             # operands, so a donated dispatch consuming them needs no redo
@@ -308,8 +414,12 @@ class DispatchPlan:
     def resident_operands(self) -> Dict[str, Any]:
         """The resident device buffers, re-staging any consumed by donation."""
         if not self._resident and self._resident_src:
-            # a donated dispatch consumed the buffers; restore from host refs
-            self.stage(dict(self._resident_src), _caller_owned=False)
+            # a donated dispatch consumed the buffers; restore from host
+            # refs through the same staging strategy they arrived by — a
+            # tree-staged operand re-crosses the host link once (root
+            # upload), not once per device
+            self.stage(dict(self._resident_src), _caller_owned=False,
+                       via=self._staged_via)
             self.stats.donation_restages += len(self.op_meta)
         if len(self._resident) != len(self.op_meta):
             raise RuntimeError(
@@ -319,8 +429,16 @@ class DispatchPlan:
         self.stats.resident_hits += len(self.op_meta)
         return dict(self._resident)
 
-    def stage_args(self, job_args: np.ndarray) -> Any:
-        """Upload job args, skipping the transfer when the value is unchanged."""
+    def stage_args(self, job_args: np.ndarray, *,
+                   via: Optional[str] = None) -> Any:
+        """Upload job args, skipping the transfer when the value is unchanged.
+
+        Replicated job args (multicast mode) honour the ``via`` staging
+        strategy too — they are the paper's actual multicast payload (the
+        phase-A job information), so ``"tree"`` sends them over the host
+        link once.  Baseline (p2p_chain) args are materialized on cluster 0
+        and tiled, an O(n)-byte host transfer by construction.
+        """
         if (self._args_dev is not None and self._args_val is not None
                 and np.array_equal(self._args_val, job_args)):
             self.stats.args_hits += 1
@@ -332,7 +450,8 @@ class DispatchPlan:
                              job_args.dtype)
             tiled[0] = job_args
             host = tiled
-        self._args_dev = jax.device_put(host, self.args_sharding)
+        self._args_dev = self._put(np.asarray(host), self.args_sharding,
+                                   self._resolve_via(via))
         self.stats.device_puts += 1
         self._args_val = job_args.copy()
         return self._args_dev

@@ -43,7 +43,9 @@ from typing import Any, Deque, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.jobs import PaperJob
-from repro.core.offload import DispatchPlan, JobHandle, OffloadRuntime
+from repro.core.offload import (
+    DispatchPlan, JobHandle, OffloadRuntime, STAGING_MODES,
+)
 from repro.core import multicast as mc
 
 
@@ -58,15 +60,24 @@ class OffloadStream:
                  request: Optional[mc.MulticastRequest] = None,
                  clusters: Optional[Sequence[int]] = None,
                  depth: int = 2,
-                 window: Optional[int] = None):
+                 window: Optional[int] = None,
+                 staging: Optional[str] = None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         if window is not None and window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
+        if staging is not None and staging not in STAGING_MODES:
+            raise ValueError(
+                f"staging {staging!r} not in {STAGING_MODES}")
         self.runtime = runtime
         self.job = job
         self._sel = dict(n=n, request=request, clusters=clusters)
         self.depth = depth
+        #: staging strategy for slot uploads (None = the runtime default);
+        #: "tree" keeps the double-buffered E(k+1) || F(k) overlap *and*
+        #: O(1) host-link bytes per job — the upload-overlap property only
+        #: concerns when staging happens, the tree only concerns how
+        self.staging = staging
         # the window is capped by the completion-unit copies: job k and job
         # k + n_units share a unit, so k must have completed first
         self.window = min(window or runtime.unit.n_units,
@@ -108,12 +119,13 @@ class OffloadStream:
         if resident:
             staged = self.plan.resident_operands()
         else:
-            staged = self.plan.stage(operands, slot=self._seq % self.depth)
+            staged = self.plan.stage(operands, slot=self._seq % self.depth,
+                                     via=self.staging)
         if len(self._inflight) >= self.window:
             # all completion-unit copies busy: block on the oldest job
             self._inflight.popleft().wait()
             self.stats["window_stalls"] += 1
-        args_dev = self.plan.stage_args(job_args)
+        args_dev = self.plan.stage_args(job_args, via=self.staging)
         handle = self.runtime._launch(self.plan, args_dev, staged,
                                       consumed_resident=resident)
         self._inflight.append(handle)

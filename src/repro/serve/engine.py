@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import broadcast as bc
 from repro.core.completion import CompletionUnit
 from repro.dist.sharding import batch_specs, cache_specs, param_specs, to_shardings
 from repro.models.config import ModelConfig
@@ -61,6 +62,14 @@ from repro.models.model import (
 )
 
 Pytree = Any
+
+
+class _ByteCounter:
+    """Duck-typed stats sink for :mod:`repro.core.broadcast` byte counters."""
+
+    def __init__(self):
+        self.h2d_bytes = 0
+        self.d2d_bytes = 0
 
 
 def _serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
@@ -255,6 +264,18 @@ class ServeConfig:
     decode_chunk: int = 8            # tokens per dispatch in "chunk" mode
     prefill_bucket: int = 16         # generate_many pads prefills to this
                                      # granularity (bounds compile count)
+    staging: str = "direct"          # replicated-placement strategy for
+                                     # weight placement and prefill inserts:
+                                     # "direct" | "tree" | "tree_reshard"
+                                     # (repro.core.broadcast semantics; the
+                                     # serialized host_fanout baseline is an
+                                     # offload-runtime measurement device,
+                                     # not a serving mode)
+
+    def __post_init__(self):
+        valid = tuple(m for m in bc.STAGING_MODES if m != "host_fanout")
+        if self.staging not in valid:
+            raise ValueError(f"staging {self.staging!r} not in {valid}")
 
 
 class ServeEngine:
@@ -279,9 +300,11 @@ class ServeEngine:
         self._ragged_step = None       # continuous-batching programs
         self._insert_fn = None
         self._prefill_fn = None
+        self._stager: Optional[bc.TreeStager] = None   # hierarchical staging
         self.stats = {"h2d_token_puts": 0, "xla_dispatches": 0,
                       "tokens_emitted": 0, "prefill_inserts": 0,
-                      "requests_retired": 0, "batch_padded_rows": 0}
+                      "requests_retired": 0, "batch_padded_rows": 0,
+                      "h2d_bytes": 0, "d2d_bytes": 0}
 
     # -- program cache -----------------------------------------------------------
 
@@ -331,6 +354,53 @@ class ServeEngine:
                 lambda p, toks: prefill(p, self.cfg, {"tokens": toks},
                                         self.scfg.max_len, self.call))
         return self._prefill_fn
+
+    # -- hierarchical staging (weight placement + prefill inserts) ----------------
+
+    def _get_stager(self) -> bc.TreeStager:
+        if self._stager is None:
+            self._stager = bc.TreeStager(list(self.mesh.devices.flat))
+        return self._stager
+
+    def _put_replicated(self, arr: np.ndarray):
+        """Replicated placement under ``scfg.staging``, link bytes counted."""
+        sharding = NamedSharding(self.mesh, P())
+        if self.scfg.staging in bc.TREE_MODES:
+            counted = _ByteCounter()
+            out = self._get_stager().put_replicated(
+                arr, sharding, reshard=self.scfg.staging == "tree_reshard",
+                stats=counted)
+            self.stats["h2d_bytes"] += counted.h2d_bytes
+            self.stats["d2d_bytes"] += counted.d2d_bytes
+            return out
+        self.stats["h2d_bytes"] += bc.placement_bytes(arr, sharding)
+        return jax.device_put(arr, sharding)
+
+    def place_params(self, host_params: Pytree) -> Pytree:
+        """Place host-side parameters onto the mesh and adopt them.
+
+        Under ``staging="tree"`` every fully replicated leaf (1-D scales,
+        biases, anything the sharding rules could not split) crosses the
+        host link once and fans out device-to-device along the broadcast
+        tree; sharded leaves take the direct path.  ``stats["h2d_bytes"]``
+        / ``stats["d2d_bytes"]`` record the logical link traffic either
+        way, so tests can assert the O(n) -> O(1) weight-placement claim.
+        """
+        shardings = to_shardings(self._shardings[0], self.mesh)
+        counted = _ByteCounter()
+        if self.scfg.staging in bc.TREE_MODES:
+            placed = bc.place_pytree(
+                host_params, shardings, self._get_stager(),
+                reshard=self.scfg.staging == "tree_reshard", stats=counted)
+        else:
+            def put(leaf, sh):
+                counted.h2d_bytes += bc.placement_bytes(np.asarray(leaf), sh)
+                return jax.device_put(leaf, sh)
+            placed = jax.tree_util.tree_map(put, host_params, shardings)
+        self.stats["h2d_bytes"] += counted.h2d_bytes
+        self.stats["d2d_bytes"] += counted.d2d_bytes
+        self.params = placed
+        return placed
 
     # -- generation ---------------------------------------------------------------
 
@@ -560,8 +630,10 @@ class ServeEngine:
             sb = min(-(-(s - 1) // bucket) * bucket, self.scfg.max_len)
             padded = np.zeros((1, sb), np.int32)
             padded[0, :s - 1] = prompt[:-1]
+            # the bucketed prompt is replicated input to the prefill
+            # program; tree staging sends it over the host link once
             _, pcache = self._get_prefill_fn()(self.params,
-                                               jnp.asarray(padded))
+                                               self._put_replicated(padded))
             cache = self._get_insert_fn()(cache, pcache["k"], pcache["v"],
                                           np.int32(slot))
         tok = tok.at[slot, 0].set(int(prompt[-1]))

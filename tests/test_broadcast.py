@@ -1,0 +1,176 @@
+"""The hierarchical broadcast tree and the staging cost model.
+
+Tree shape/coverage is property-tested against the brute-force
+``MulticastRequest`` decode oracle: every selected cluster is reached
+exactly once, the depth respects the fig.-5 two-level bound, and the
+degenerate (n=1) and non-power-of-two selections behave.  The staging
+cost model's closed form is validated against the discrete-event
+simulation under the paper's <15 % bar (§6).
+"""
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import broadcast as bc
+from repro.core import multicast as mc
+from repro.core import simulator
+
+
+def check_tree(tree: bc.BroadcastTree, ids) -> None:
+    """Structural invariants every fan-out tree must satisfy."""
+    ids = sorted(set(ids))
+    assert tree.clusters == tuple(ids)
+    assert tree.root == ids[0]
+    # coverage: root + every edge destination == the selection, no repeats
+    assert tree.reached() == tuple(ids)
+    assert len(tree.edges) == len(ids) - 1
+    dsts = [d for _, d in tree.edges]
+    assert len(dsts) == len(set(dsts)), "a cluster was reached twice"
+    assert tree.root not in dsts
+    # causality: every level's sources already hold the data, and a level
+    # never reuses a node (edges of one level are parallel transfers)
+    have = {tree.root}
+    for level in tree.levels:
+        used = set()
+        assert level, "empty level recorded"
+        for s, d in level:
+            assert s in have, f"source {s} sends before receiving"
+            assert d not in have, f"{d} receives twice"
+            assert s not in used and d not in used, "node reused in level"
+            used |= {s, d}
+        have |= {d for _, d in level}
+    assert have == set(ids)
+    # the fig.-5 depth bound
+    assert tree.depth <= bc.depth_bound(ids)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, mc.NUM_CLUSTERS - 1), min_size=1,
+                max_size=mc.NUM_CLUSTERS))
+def test_tree_covers_any_selection(ids):
+    check_tree(bc.build_tree(ids), ids)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, (1 << mc.CLUSTER_IDX_BITS + mc.QUADRANT_IDX_BITS) - 1),
+       st.integers(0, (1 << mc.CLUSTER_IDX_BITS + mc.QUADRANT_IDX_BITS) - 1))
+def test_tree_from_request_matches_decode_oracle(base, varying):
+    """The tree reaches exactly the clusters the (addr, mask) decodes to."""
+    req = mc.MulticastRequest(addr=base << mc.CLUSTER_OFFSET_BITS,
+                              mask=varying << mc.CLUSTER_OFFSET_BITS)
+    oracle = mc.decode_cluster_selection(req, mc.NUM_CLUSTERS)
+    tree = bc.tree_from_request(req)
+    assert tree.reached() == tuple(sorted(oracle))
+    check_tree(tree, oracle)
+
+
+def test_degenerate_single_cluster():
+    tree = bc.build_tree([5])
+    assert tree.depth == 0 and tree.edges == () and tree.root == 5
+    assert tree.reached() == (5,)
+
+
+def test_non_power_of_two_selection():
+    ids = [0, 1, 2, 5, 6]                # 3 + 2 across two quadrants
+    tree = bc.build_tree(ids)
+    check_tree(tree, ids)
+    assert tree.depth <= 1 + 2           # ceil(log2 2) + ceil(log2 3)
+
+
+def test_quadrant_structure_full_mesh():
+    """Full 32-cluster selection: inter-quadrant rounds precede intra, and
+    the depth hits exactly ceil(log2 8) + ceil(log2 4) = 5."""
+    tree = bc.build_tree(range(mc.NUM_CLUSTERS))
+    assert tree.depth == 5 == bc.depth_bound(range(mc.NUM_CLUSTERS))
+    q = lambda c: c // mc.CLUSTERS_PER_QUADRANT
+    for level in tree.levels[:3]:        # the rep broadcast crosses quadrants
+        assert all(q(s) != q(d) for s, d in level)
+    for level in tree.levels[3:]:        # the fan-in stays quadrant-local
+        assert all(q(s) == q(d) for s, d in level)
+
+
+def test_parents_map_is_a_tree():
+    tree = bc.build_tree(range(8))
+    parents = tree.parents()
+    assert set(parents) == set(range(1, 8))
+    for child in parents:                # every node walks back to the root
+        seen, node = set(), child
+        while node != tree.root:
+            assert node not in seen
+            seen.add(node)
+            node = parents[node]
+
+
+def test_empty_selection_rejected():
+    with pytest.raises(ValueError):
+        bc.build_tree([])
+
+
+# --- staging cost model ------------------------------------------------------
+
+
+def test_staging_model_error_below_paper_bar():
+    """Closed form vs discrete event < 15% in the link-bound regime."""
+    for kib in (4, 64, 1024):
+        for mode in simulator.STAGING_MODES:
+            for n in (1, 2, 4, 8, 16, 32):
+                err = simulator.staging_model_error(kib * 1024, n, mode)
+                assert err < 0.15, (kib, mode, n, err)
+
+
+def test_tree_staging_beats_host_fanout_in_cycles():
+    """Link-bound operands: the O(1)-link + O(log n)-hop tree undercuts the
+    O(n) link from n=4 up.  Tiny operands flip the other way until the
+    saved link transfers outweigh the per-hop latency (the offload-decision
+    flavour of §5.6) — the model resolves the crossover."""
+    for nbytes in (64 * 1024, 1024 * 1024):
+        for n in (4, 8, 16, 32):
+            tree = simulator.simulate_staging(nbytes, n, "tree")
+            hf = simulator.simulate_staging(nbytes, n, "host_fanout")
+            assert tree < hf, (nbytes, n, tree, hf)
+    # 4 KiB: per-hop latency dominates at n=8, the link wins by n=16
+    assert (simulator.simulate_staging(4096, 8, "tree")
+            > simulator.simulate_staging(4096, 8, "host_fanout"))
+    assert (simulator.simulate_staging(4096, 16, "tree")
+            < simulator.simulate_staging(4096, 16, "host_fanout"))
+
+
+def test_staging_monotone_in_n_and_size():
+    last = 0.0
+    for n in (1, 2, 4, 8, 16, 32):
+        t = simulator.simulate_staging(64 * 1024, n, "tree")
+        assert t > last
+        last = t
+    assert (simulator.simulate_staging(2 << 20, 8, "host_fanout")
+            > simulator.simulate_staging(1 << 20, 8, "host_fanout"))
+
+
+def test_staging_accepts_explicit_selection():
+    """Cluster-id selections (not just counts) drive the tree shape: a
+    cross-quadrant pair pays the cross-quadrant hop the closed form
+    assumes, a same-quadrant pair is cheaper."""
+    same = simulator.simulate_staging(64 * 1024, [0, 1], "tree")
+    cross = simulator.simulate_staging(64 * 1024, [0, 4], "tree")
+    assert cross > same
+    assert simulator.staging_model_error(64 * 1024, [0, 4], "tree") < 0.15
+
+
+def test_cost_model_calibration_roundtrip():
+    cm = simulator.StagingCostModel.calibrate(10.0, 18.0, 26.0, k=4)
+    assert cm.t_up == pytest.approx(8.0)
+    assert cm.t_edge == pytest.approx(16.0 / 3)
+    assert cm.predict("host_fanout", 1) == pytest.approx(10.0)
+    assert cm.predict("host_fanout", 8) == pytest.approx(66.0)
+    assert cm.predict("tree", 8) == pytest.approx(
+        2.0 + 8.0 + 7 * 16.0 / 3)
+    with pytest.raises(ValueError):
+        simulator.StagingCostModel.calibrate(10.0, 9.0, 26.0)
+    with pytest.raises(ValueError):
+        cm.predict("warp", 4)
+
+
+def test_model_error_api():
+    assert simulator.model_error(115.0, 100.0) == pytest.approx(0.15)
+    assert simulator.model_error(85.0, 100.0) == pytest.approx(0.15)
+    with pytest.raises(ValueError):
+        simulator.model_error(1.0, 0.0)
