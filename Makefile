@@ -11,11 +11,11 @@ test:
 
 bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-		$(PYTHON) -m benchmarks.run --only fig07,fig12,staging --check BENCH_offload.json
+		$(PYTHON) -m benchmarks.run --only fig07,fig12,staging,session --check BENCH_offload.json
 
 # The tracked dispatch-overhead trajectory (writes BENCH_offload.json).
 bench-offload:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PYTHON) -m benchmarks.run \
-			--only offload,stream,serve_stream,staging,staging_wall,fig07,fig12 \
+			--only offload,stream,serve_stream,staging,staging_wall,session,fig07,fig09,fig12 \
 			--json BENCH_offload.json

@@ -16,15 +16,19 @@ Subprocess-isolated measurements (the bench process keeps 1 device):
   and µs/token of ``ServeEngine`` for the legacy host round-trip loop vs
   the device-resident single-step and ``lax.scan`` chunk paths.
 
-* **stream suite** (``stream_wallclock``) — jobs/s over a stream of jobs:
-  sequential resident dispatch (the PR-1 fast path, one job at a time) vs
-  the pipelined ``OffloadStream`` in both modes — resident redispatch
-  through the in-flight window (same data movement as sequential, so the
-  delta is launch+fetch hidden behind compute) and fresh staging per job
-  (the slot double-buffer overlapping phase E with compute, against the
-  sequential re-staging baseline) — vs fused dispatch batching at B ∈
-  {1, 2, 4, 8} (per-job share of one batched launch), with the fused HLO
-  collective counts at B=2 vs B=8 (must not grow with B).
+* **stream suite** (``stream_wallclock``) — jobs/s through the one
+  ``Session.submit`` path under typed policies: sequential resident
+  dispatch (``fuse=1, window=1``) vs the pipelined window in both modes —
+  resident redispatch (same data movement as sequential, so the delta is
+  launch+fetch hidden behind compute) and fresh staging per job (the slot
+  double-buffer overlapping phase E with compute, against the sequential
+  re-staging baseline) — vs fused dispatch batching at B ∈ {1, 2, 4, 8}
+  (per-job share of one batched launch), with the fused HLO collective
+  counts at B=2 vs B=8 (must not grow with B).  ``policy=AUTO`` rows
+  record what the model-driven planner picks and what it measures —
+  the acceptance surface for "AUTO is never slower than the best
+  hand-picked mode" (asserted against this recording by
+  ``tests/test_session.py``).
 
 * **serve-throughput suite** (``serve_throughput``) — tokens/s of static
   fixed-batch ``generate`` calls vs continuous-batching ``generate_many``
@@ -66,6 +70,7 @@ import json, statistics, time
 import numpy as np
 from repro.core import jobs
 from repro.core.offload import OffloadRuntime, OffloadConfig, count_collectives
+from repro.core.policy import Residency
 
 # Large-enough operands that phase-E staging is a real cost (the paper's
 # fine-grained regime is the *ratio* of overhead to work, not tiny data).
@@ -101,9 +106,9 @@ for n in (1, 2, 4, 8):
     warm_us = median_dispatch(lambda: rt.offload(job, operands, n=n), ITERS)
     warm_e2e_us = median_e2e(lambda: rt.offload(job, operands, n=n), ITERS)
     resident_us = median_dispatch(
-        lambda: rt.offload(job, "resident", n=n), ITERS)
+        lambda: rt.offload(job, Residency.RESIDENT, n=n), ITERS)
     resident_e2e_us = median_e2e(
-        lambda: rt.offload(job, "resident", n=n), ITERS)
+        lambda: rt.offload(job, Residency.RESIDENT, n=n), ITERS)
     out["sweep"][str(n)] = {
         "cold_us": cold_us,
         "warm_dispatch_us": warm_us,
@@ -164,60 +169,90 @@ print(json.dumps(out))
 _STREAM_CHILD = """
 import json, statistics, time
 import numpy as np
+from repro.api import AUTO, OffloadPolicy, Residency, Session
 from repro.core import jobs
-from repro.core.offload import OffloadRuntime, count_collectives
-from repro.core.stream import OffloadStream
+from repro.core.offload import count_collectives
 
 # Stream measurement wants the t_compute > t_stage + t_dispatch regime,
 # where pipelining hides the whole per-job host cost behind compute (the
 # amortization model's max(t_stage, t_compute) term): a mid-size matmul.
+# Every mode is a typed policy through the one Session.submit path; the
+# legacy hand-picked modes pin their knobs, `auto` lets the planner pick.
 job = jobs.make_matmul(256, 256, 256)
 N_JOBS = 32
-REPEATS = 5
+REPEATS = 8
 insts, _ = jobs.make_instances(job, 8, seed0=0)
 out = {}
 
-rt = OffloadRuntime(n_units=4)
-rt.offload(job, insts[0], n=8).wait()          # warm plan + compile
-
-def jobs_per_s(fn):
-    best = 0.0
-    for _ in range(REPEATS):
-        t0 = time.perf_counter()
-        fn()
-        best = max(best, N_JOBS / (time.perf_counter() - t0))
-    return best
+SEQ = OffloadPolicy(fuse=1, window=1)
+PIPE = OffloadPolicy(fuse=1)                   # window -> planner (n_units)
+sess = Session(n_units=4)
+sess.submit(job, insts[0], n=8, policy=SEQ).wait()   # warm plan + compile
+sess.stage(job, insts[0], n=8)                       # prime residency
 
 def seq_resident():
     for _ in range(N_JOBS):
-        rt.offload(job, "resident", n=8).wait()
+        sess.submit(job, Residency.RESIDENT, n=8, policy=SEQ).wait()
 
 def seq_restage():
     for i in range(N_JOBS):
-        rt.offload(job, insts[i % 8], n=8).wait()
+        sess.submit(job, insts[i % 8], n=8, policy=SEQ).wait()
 
-stream = OffloadStream(rt, job, n=8)
-stream.map(insts[:4])                          # warm the slot path
+# warm the pipelined slot path (and its estimate cache)
+sess.submit(job, insts[:4], n=8, policy=PIPE).wait()
 
 def pipelined():
-    handles = [stream.submit(insts[i % 8]) for i in range(N_JOBS)]
+    handles = [sess.submit(job, insts[i % 8], n=8, policy=PIPE)
+               for i in range(N_JOBS)]
     for h in handles:
         h.wait()
 
 def pipelined_resident():
     # same data movement as seq_resident (none): isolates what the
     # in-flight window buys — launch+fetch hidden behind compute
-    handles = [stream.submit("resident") for _ in range(N_JOBS)]
+    handles = [sess.submit(job, Residency.RESIDENT, n=8, policy=PIPE)
+               for _ in range(N_JOBS)]
     for h in handles:
         h.wait()
 
+# AUTO: one list submit, the planner picks fuse/window/staging from the
+# cost models (fused launches pipelined through the window)
+auto_work = [insts[i % 8] for i in range(N_JOBS)]
+auto_handle = sess.submit(job, auto_work, n=8)       # compile + warm
+auto_handle.wait()
+auto_decision = auto_handle.decision
+
+def auto_submit():
+    sess.submit(job, auto_work, n=8).wait()
+
+# Round-robin measurement: this substrate's throughput drifts over the
+# child's lifetime (a small CPU share under an 8-device mesh), so timing
+# each mode in its own block would bias whichever runs first.  Interleave
+# one run of every mode per round and keep each mode's best round.
+modes = {
+    "seq_resident": seq_resident,
+    "seq_restage": seq_restage,
+    "pipelined": pipelined,
+    "pipelined_resident": pipelined_resident,
+    "auto": auto_submit,
+}
+best = {k: 0.0 for k in modes}
+for _ in range(REPEATS):
+    for k, fn in modes.items():
+        t0 = time.perf_counter()
+        fn()
+        best[k] = max(best[k], N_JOBS / (time.perf_counter() - t0))
+
 out["stream"] = {
-    "seq_resident_jobs_s": jobs_per_s(seq_resident),
-    "seq_restage_jobs_s": jobs_per_s(seq_restage),
-    "pipelined_jobs_s": jobs_per_s(pipelined),
-    "pipelined_resident_jobs_s": jobs_per_s(pipelined_resident),
-    "window": stream.window,
-    "window_stalls": stream.stats["window_stalls"],
+    "seq_resident_jobs_s": best["seq_resident"],
+    "seq_restage_jobs_s": best["seq_restage"],
+    "pipelined_jobs_s": best["pipelined"],
+    "pipelined_resident_jobs_s": best["pipelined_resident"],
+    "auto_jobs_s": best["auto"],
+    "auto_decision": {"fuse": auto_decision.fuse,
+                      "window": auto_decision.window,
+                      "staging": auto_decision.staging.value},
+    "window": auto_decision.window,
 }
 
 # fused dispatch batching: per-job share of one batched launch.  The
@@ -225,34 +260,41 @@ out["stream"] = {
 # fusing pays — the paper's axpy.
 job = jobs.make_axpy(16384)
 insts, _ = jobs.make_instances(job, 8, seed0=0)
-rtf = OffloadRuntime()
-rtf.offload(job, insts[0], n=8).wait()
+sf = Session()
+sf.stage(job, insts[0], n=8)
 res_ts = []
 for _ in range(60):
     t0 = time.perf_counter()
-    h = rtf.offload(job, "resident", n=8)
+    h = sf.submit(job, Residency.RESIDENT, n=8, policy=OffloadPolicy(window=1))
     res_ts.append(time.perf_counter() - t0)
     h.wait()
-resident_single_us = statistics.median(res_ts) * 1e6
+# least-interference samples: this substrate's 8-device mesh oversubscribes
+# a small CPU share, so medians still carry scheduler spikes (same practice
+# as the staging_wall suite)
+resident_single_us = min(res_ts) * 1e6
 
 fused = {}
 for B in (1, 2, 4, 8):
-    bi, _ = jobs.make_instances(job, B, seed0=0)
-    rtf.offload_fused(job, bi, n=8).wait()     # compile + stage resident
-    ts, e2e = [], []
+    if B == 1:
+        # B=1 is the unfused resident dispatch (the amortization anchor)
+        polB = OffloadPolicy(window=1)
+    else:
+        bi, _ = jobs.make_instances(job, B, seed0=0)
+        polB = OffloadPolicy(fuse=B, window=1)
+        sf.stage(job, bi, n=8)                 # compile + stage fused batch
+    ts = []
     for _ in range(40):
         t0 = time.perf_counter()
-        h = rtf.offload_fused(job, "resident", batch=B, n=8)
+        h = sf.submit(job, Residency.RESIDENT, n=8, policy=polB)
         ts.append((time.perf_counter() - t0) / B)
         h.wait()
-        e2e.append((time.perf_counter() - t0) / B)
-    fused[str(B)] = {
-        "dispatch_us_per_job": statistics.median(ts) * 1e6,
-        "e2e_us_per_job": statistics.median(e2e) * 1e6,
-    }
+    fused[str(B)] = {"dispatch_us_per_job": min(ts) * 1e6}
+
+rtf = sf.runtime()
 out["fused"] = {
     "resident_single_dispatch_us": resident_single_us,
     "per_job": fused,
+    "auto_fuse_pick": sf.estimate(job, batch=8, n=8).decision.fuse,
     "collectives_B2": count_collectives(rtf.lowered_text(job, 8, fuse=2)),
     "collectives_B8": count_collectives(rtf.lowered_text(job, 8, fuse=8)),
 }
@@ -329,6 +371,7 @@ import json, time
 import jax, numpy as np
 from repro.core import jobs
 from repro.core.offload import OffloadRuntime
+from repro.core.policy import Staging
 
 # One big replicated operand (the covariance data matrix, broadcast class):
 # 32 MiB stays bandwidth-bound — well past the cache sizes below which this
@@ -350,7 +393,7 @@ for n in (1, 2, 4, 8):
         cold_ms = None
         for i in range(ITERS + 1):
             t0 = time.perf_counter()
-            staged = plan.stage(operands, via=mode)
+            staged = plan.stage(operands, via=Staging(mode))
             jax.block_until_ready(list(staged.values()))
             dt = (time.perf_counter() - t0) * 1e3
             if i == 0:
@@ -449,7 +492,13 @@ offload_wallclock.last_raw = {}
 
 
 def stream_wallclock() -> Tuple[List[Row], str]:
-    """Stream suite: sequential vs pipelined vs fused-dispatch jobs/s."""
+    """Stream suite: hand-picked policies vs the AUTO planner, jobs/s.
+
+    Every mode runs through ``Session.submit``; the legacy modes pin
+    their policy knobs (``fuse=1, window=1`` = sequential, ``fuse=1`` =
+    pipelined, ``fuse=B, window=1`` = fused) and ``auto`` lets the
+    planner pick — its decision is recorded as exact-compare rows.
+    """
     rows: List[Row] = []
     data = _run_child(_STREAM_CHILD)
     st, fu = data["stream"], data["fused"]
@@ -461,11 +510,18 @@ def stream_wallclock() -> Tuple[List[Row], str]:
                  "jobs/s"))
     rows.append(("stream/matmul256/8dev/pipelined_resident",
                  st["pipelined_resident_jobs_s"], "jobs/s"))
+    rows.append(("stream/matmul256/8dev/auto", st["auto_jobs_s"], "jobs/s"))
+    rows.append(("stream/matmul256/8dev/auto/fuse",
+                 st["auto_decision"]["fuse"], "jobs"))
+    rows.append(("stream/matmul256/8dev/auto/window",
+                 st["auto_decision"]["window"], "count"))
     rows.append(("stream/fused/resident_single_dispatch",
                  fu["resident_single_dispatch_us"], "us/job"))
     for b, d in sorted(fu["per_job"].items(), key=lambda kv: int(kv[0])):
         rows.append((f"stream/fused/B{b}/dispatch",
                      d["dispatch_us_per_job"], "us/job"))
+    rows.append(("stream/fused/auto_fuse_pick", fu["auto_fuse_pick"],
+                 "jobs"))
     rows.append(("stream/fused/allreduce_B2",
                  fu["collectives_B2"]["all-reduce"], "collectives"))
     rows.append(("stream/fused/allreduce_B8",
@@ -475,13 +531,17 @@ def stream_wallclock() -> Tuple[List[Row], str]:
              / max(fu["per_job"]["8"]["dispatch_us_per_job"], 1e-9))
     speedup = (st["pipelined_resident_jobs_s"]
                / max(st["seq_resident_jobs_s"], 1e-9))
-    stage_speedup = (st["pipelined_jobs_s"]
-                     / max(st["seq_restage_jobs_s"], 1e-9))
+    best_fresh = max(st["seq_restage_jobs_s"], st["pipelined_jobs_s"])
+    auto_margin = st["auto_jobs_s"] / max(best_fresh, 1e-9)
+    ad = st["auto_decision"]
     derived = (
-        f"pipelined resident {st['pipelined_resident_jobs_s']:.0f} jobs/s "
-        f"vs sequential resident {st['seq_resident_jobs_s']:.0f} jobs/s "
-        f"({speedup:.2f}x, window={st['window']}); staged pipeline vs "
-        f"re-staging {stage_speedup:.2f}x; fused B=8 dispatch "
+        f"AUTO (fuse={ad['fuse']}, window={ad['window']}, "
+        f"staging={ad['staging']}) {st['auto_jobs_s']:.0f} jobs/s = "
+        f"{auto_margin:.2f}x the best hand-picked fresh mode "
+        f"({best_fresh:.0f} jobs/s); pipelined resident "
+        f"{st['pipelined_resident_jobs_s']:.0f} jobs/s vs sequential "
+        f"resident {st['seq_resident_jobs_s']:.0f} jobs/s ({speedup:.2f}x); "
+        f"fused B=8 dispatch "
         f"{fu['per_job']['8']['dispatch_us_per_job']:.0f}us/job vs resident "
         f"single {fu['resident_single_dispatch_us']:.0f}us/job "
         f"({amort:.1f}x amortization); fused all-reduce count "

@@ -26,8 +26,11 @@ puts, dispatches, bytes) must match exactly; cold-start rows
 * on failure, a per-metric ``measured / recorded / delta`` table of every
   compared row is printed so the drift is diagnosable from the CI log.
 
-CI wires a deterministic ``--only`` subset (fig07, fig12, staging) through
-this so benchmark bit-rot breaks the build.
+CI wires a deterministic ``--only`` subset (fig07, fig12, staging,
+session) through this so benchmark bit-rot breaks the build.  The
+``session`` suite (``benchmarks/session_bench.py``) pins the session
+API's estimate contract — every ``Session.estimate`` prediction within
+the 15 % bar — and the AUTO planner's decision signature.
 """
 
 import argparse
@@ -144,6 +147,7 @@ def main() -> None:
         offload_wallclock, serve_throughput, staging_wall, stream_wallclock,
     )
     from benchmarks.paper_figs import ALL_FIGS
+    from benchmarks.session_bench import session_suite
     from benchmarks.staging import staging_suite
 
     suites = dict(ALL_FIGS)
@@ -153,6 +157,7 @@ def main() -> None:
     suites["serve_stream"] = serve_throughput
     suites["staging"] = staging_suite
     suites["staging_wall"] = staging_wall
+    suites["session"] = session_suite
     if args.only:
         keep = set(args.only.split(","))
         suites = {k: v for k, v in suites.items() if k in keep}

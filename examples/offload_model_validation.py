@@ -1,10 +1,11 @@
 """Analytical-model walkthrough: reproduce the paper's eqs. 5/6 and fig. 12
 validation, then use the model the way the paper intends — to make offload
-decisions.
+decisions, including the session API's ``policy=AUTO`` mode selection.
 
     PYTHONPATH=src python examples/offload_model_validation.py
 """
 
+from repro.api import AUTO, estimate
 from repro.core import jobs, model, simulator
 
 
@@ -43,6 +44,18 @@ def main() -> None:
         go, n2, t2 = model.should_offload(mk(), host)
         print(f"  {name:12s}: offload to n={n:2d} (predicted {t:8.0f} cyc); "
               f"vs host {host:8.0f} cyc -> offload={go}")
+
+    print("\n=== Session.estimate: the model as an API contract (AUTO) ===")
+    for name, mkjob in (("axpy-16k", lambda: jobs.make_axpy(16384)),
+                        ("matmul-256", lambda: jobs.make_matmul(256, 256, 256)),
+                        ("covariance-64", lambda: jobs.make_covariance(64, 128))):
+        est = estimate(mkjob(), n=8, batch=16, policy=AUTO)
+        d = est.decision
+        sim = simulator.simulate(mkjob().spec, 8, "multicast").total
+        err = simulator.model_error(est.job_cycles, sim)
+        print(f"  {name:14s}: fuse={d.fuse} window={d.window} "
+              f"staging={d.staging.value:7s}  predicted {est.job_cycles:9.0f} "
+              f"cyc (sim {sim:9.0f}, err {err * 100:4.1f}%)")
 
 
 if __name__ == "__main__":

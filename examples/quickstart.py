@@ -1,8 +1,9 @@
 """Quickstart: the paper's offload runtime in two minutes.
 
-Offloads the paper's AXPY kernel onto an 8-"cluster" mesh through both
-offload implementations, shows the O(n)-chain vs broadcast-tree collective
-structure, and asks the analytical model for the optimal offload width.
+Drives the paper's AXPY kernel through the session API (typed policies,
+one submit path, ``policy=AUTO`` model-driven mode selection), compares
+both offload implementations' collective structure, and asks the
+analytical model for the optimal offload width.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,41 +14,62 @@ os.environ.setdefault("JAX_ENABLE_X64", "true")
 
 import numpy as np
 
+from repro.api import (
+    AUTO, InfoDist, OffloadPolicy, Residency, Session,
+)
 from repro.core import jobs, model, simulator
 from repro.core.multicast import CLUSTER_OFFSET_BITS, MulticastRequest
-from repro.core.offload import OffloadConfig, OffloadRuntime, count_collectives
+from repro.core.offload import count_collectives
 
 
 def main() -> None:
     job = jobs.make_axpy(4096)
+    sess = Session()          # every local "cluster"; default policy=AUTO
 
-    print("=== 1. offload through both implementations (8 clusters) ===")
-    for label, cfg in (("baseline ", OffloadConfig.baseline()),
-                       ("multicast", OffloadConfig.extended())):
-        rt = OffloadRuntime(config=cfg)
-        got, expected = rt.run(job, seed=0, n=8)
-        colls = count_collectives(rt.lowered_text(job, 8))
+    print("=== 1. one submit path, both implementations (8 clusters) ===")
+    for label, pol in (("baseline ", OffloadPolicy(
+                            info_dist=InfoDist.P2P_CHAIN,
+                            completion="central_counter")),
+                       ("multicast", AUTO)):
+        operands, expected = job.make_instance(0)
+        got = sess.submit(job, operands, n=8, policy=pol).wait()
+        colls = count_collectives(sess.runtime(pol).lowered_text(job, 8))
         print(f"  {label}: allclose={np.allclose(got, expected)}  "
               f"chain={colls['collective-permute']} collective-permutes, "
               f"{colls['all-reduce']} all-reduce")
 
-    print("\n=== 2. cluster selection via the paper's address-mask (fig. 5) ===")
+    print("\n=== 2. AUTO: fused + pipelined + resident, planner-picked ===")
+    instances, exps = jobs.make_instances(job, 16, seed0=2)
+    handle = sess.submit(job, instances, n=8)     # policy=AUTO
+    results = handle.wait()
+    ok = all(np.allclose(r, e) for r, e in zip(results, exps))
+    d = handle.decision
+    print(f"  16 jobs -> fuse={d.fuse}, window={d.window}, "
+          f"staging={d.staging.value}; allclose={ok}")
+    print("  predicted vs measured (handle.explain()):")
+    for line in str(handle.explain()).splitlines():
+        print(f"    {line}")
+    sess.stage(job, instances[0], n=8)            # prime residency
+    got = sess.submit(job, Residency.RESIDENT, n=8).wait()
+    print(f"  resident redispatch: allclose={np.allclose(got, exps[0])}")
+
+    print("\n=== 3. cluster selection via the paper's address-mask (fig. 5) ===")
     req = MulticastRequest(addr=1 << CLUSTER_OFFSET_BITS,
                            mask=0b110 << CLUSTER_OFFSET_BITS)
-    rt = OffloadRuntime(config=OffloadConfig.extended())
-    devs, ids = rt.select_clusters(request=req)
-    got, expected = rt.run(job, seed=1, request=req)
+    devs, ids = sess.runtime().select_clusters(request=req)
+    operands, expected = job.make_instance(1)
+    got = sess.submit(job, operands, request=req).wait()
     print(f"  mask 0b110 over cluster bits -> clusters {ids}; "
           f"allclose={np.allclose(got, expected)}")
 
-    print("\n=== 3. the simulator: what this offload costs on Occamy ===")
+    print("\n=== 4. the simulator: what this offload costs on Occamy ===")
     for n in (1, 4, 8, 32):
         base = simulator.simulate(job.spec, n, 'baseline').total
         ext = simulator.simulate(job.spec, n, 'multicast').total
         print(f"  n={n:2d}: baseline={base:7.0f} cyc  multicast={ext:7.0f} cyc "
               f"  speedup={base/ext:.2f}x")
 
-    print("\n=== 4. the analytical model: how wide should we offload? ===")
+    print("\n=== 5. the analytical model: how wide should we offload? ===")
     for N in (64, 1024, 65536):
         n_opt, t = model.optimal_clusters(lambda: jobs.axpy_spec(N))
         print(f"  AXPY N={N:6d}: optimal n={n_opt:2d} "

@@ -15,22 +15,23 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro import models as M
+from repro.api import ServeConfig, ServeEngine, Staging
 from repro.data import DataConfig, SyntheticStream
-from repro.dist.sharding import param_specs, to_shardings
-from repro.serve import ServeConfig, ServeEngine
 
 
 def demo(arch: str, batch: int = 4, prompt: int = 16, new: int = 24) -> None:
     cfg = M.reduced(M.get(arch))
     devs = jax.devices()
     mesh = Mesh(np.array(devs).reshape(4, 2), ("data", "model"))
-    params = M.init_params(jax.random.key(0), cfg)
-    pspecs = param_specs(params, mesh)
-    params = jax.device_put(params, to_shardings(pspecs, mesh))
+    params = jax.device_get(M.init_params(jax.random.key(0), cfg))
 
     engine = ServeEngine(cfg, params, mesh,
                          ServeConfig(batch=batch, max_len=prompt + new + 1,
-                                     temperature=0.8, seed=7))
+                                     temperature=0.8, seed=7,
+                                     staging=Staging.TREE))
+    # typed tree staging: replicated weight leaves cross the host link
+    # once and fan out device-to-device (stats below count the bytes)
+    engine.place_params(params)
     stream = SyntheticStream(
         DataConfig(vocab_size=cfg.vocab_size, batch_size=batch,
                    seq_len=prompt, seed=1), cfg)
@@ -43,6 +44,9 @@ def demo(arch: str, batch: int = 4, prompt: int = 16, new: int = 24) -> None:
                   else "SSM state" if cfg.ssm else "KV")
     print(f"{arch:24s} [{cfg.family:6s}] cache={cache_kind:20s} "
           f"{batch * new} tokens in {dt:5.1f}s ({batch * new / dt:6.1f} tok/s)")
+    print(f"  weight placement: {engine.stats['h2d_bytes'] / 1e6:.1f} MB "
+          f"host-link, {engine.stats['d2d_bytes'] / 1e6:.1f} MB d2d "
+          f"(staging={engine.scfg.staging.value})")
     print(f"  sample: {out[0][:12].tolist()}")
 
 

@@ -1,0 +1,82 @@
+"""``repro.api`` — the one import for the predictive offload session API.
+
+The stable, snapshot-tested public surface of the framework (see
+``tests/test_api_surface.py``): typed policies, the unified
+:class:`Session` submit path, the model-driven ``AUTO`` planner, the
+prediction contract (:func:`estimate` / :func:`predict_staging`,
+paper §6, error < 15 %), and the serving engine.
+
+Quickstart::
+
+    from repro.api import AUTO, Residency, Session
+    from repro.core import jobs
+
+    sess = Session()                      # every local device
+    job = jobs.make_covariance(512, 256)
+    instances, _ = jobs.make_instances(job, 16)
+
+    print(sess.estimate(job, batch=16))   # predicted phase breakdown
+    handle = sess.submit(job, instances)  # AUTO: tree staging, fused,
+    results = handle.wait()               #       pipelined window
+    print(handle.explain())               # predicted vs measured
+
+Legacy surface (``offload(job, "resident")``, string ``via=`` /
+``staging=`` modes, direct ``OffloadStream`` / ``offload_fused``) keeps
+working behind :class:`DeprecationWarning` shims; the README's "Session
+API" section has the migration table.
+"""
+
+from repro.core.jobs import PAPER_JOBS, PaperJob, make_instances
+from repro.core.multicast import MulticastRequest
+from repro.core.offload import (
+    JobHandle,
+    OffloadConfig,
+    OffloadRuntime,
+    PlanStats,
+)
+from repro.core.policy import (
+    AUTO,
+    Completion,
+    InfoDist,
+    OffloadPolicy,
+    Residency,
+    Staging,
+)
+from repro.core.session import (
+    Estimate,
+    Explain,
+    PlanDecision,
+    Planner,
+    Session,
+    SessionHandle,
+    estimate,
+    predict_staging,
+)
+from repro.serve import ServeConfig, ServeEngine
+
+__all__ = [
+    "AUTO",
+    "Completion",
+    "Estimate",
+    "Explain",
+    "InfoDist",
+    "JobHandle",
+    "MulticastRequest",
+    "OffloadConfig",
+    "OffloadPolicy",
+    "OffloadRuntime",
+    "PAPER_JOBS",
+    "PaperJob",
+    "PlanDecision",
+    "PlanStats",
+    "Planner",
+    "Residency",
+    "ServeConfig",
+    "ServeEngine",
+    "Session",
+    "SessionHandle",
+    "Staging",
+    "estimate",
+    "make_instances",
+    "predict_staging",
+]

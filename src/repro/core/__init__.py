@@ -38,6 +38,24 @@ from repro.core.offload import (
     PlanStats,
     count_collectives,
 )
+from repro.core.policy import (
+    AUTO,
+    Completion,
+    InfoDist,
+    OffloadPolicy,
+    Residency,
+    Staging,
+)
+from repro.core.session import (
+    Estimate,
+    Explain,
+    PlanDecision,
+    Planner,
+    Session,
+    SessionHandle,
+    estimate,
+    predict_staging,
+)
 from repro.core.stream import OffloadStream
 from repro.core.params import DEFAULT_PARAMS, OccamyParams
 from repro.core.phases import Phase, PhaseStats
@@ -55,20 +73,25 @@ from repro.core.simulator import (
 )
 
 __all__ = [
-    "AddressMap", "BroadcastTree", "CompletionUnit", "DEFAULT_PARAMS",
-    "DispatchPlan",
-    "FusedHandle", "JobHandle", "JobSpec",
-    "MulticastRequest", "OccamyParams", "OffloadConfig", "OffloadRuntime",
-    "OffloadStream", "PlanStats",
-    "PAPER_JOBS", "PaperJob", "Phase", "PhaseStats", "SimResult",
-    "StagingCostModel", "TreeStager",
+    "AUTO", "AddressMap", "BroadcastTree", "Completion", "CompletionUnit",
+    "DEFAULT_PARAMS",
+    "DispatchPlan", "Estimate", "Explain",
+    "FusedHandle", "InfoDist", "JobHandle", "JobSpec",
+    "MulticastRequest", "OccamyParams", "OffloadConfig", "OffloadPolicy",
+    "OffloadRuntime",
+    "OffloadStream", "PlanDecision", "PlanStats", "Planner",
+    "PAPER_JOBS", "PaperJob", "Phase", "PhaseStats", "Residency",
+    "Session", "SessionHandle", "SimResult",
+    "Staging", "StagingCostModel", "TreeStager",
     "atax_closed_form_paper", "axpy_closed_form", "count_collectives",
     "build_tree", "decode_cluster_selection", "decode_match",
     "depth_bound", "encode_cluster_selection",
-    "encode_cluster_selection_multi", "make_instances", "model_error",
+    "encode_cluster_selection_multi", "estimate", "make_instances",
+    "model_error",
     "offload_overhead", "place_pytree",
     "optimal_clusters",
-    "predict", "predict_total", "predict_total_v2", "should_offload",
+    "predict", "predict_staging", "predict_total", "predict_total_v2",
+    "should_offload",
     "simulate", "simulate_staging", "speedups", "stack_instances",
     "staging_model", "staging_model_error", "tree_from_request", "validate",
 ]

@@ -126,11 +126,37 @@ from repro.core.completion import (
     completion_unit_arrivals,
 )
 from repro.core.jobs import PaperJob, stack_instances
+from repro.core.policy import (
+    Completion, InfoDist, Residency, Staging, coerce_enum, warn_legacy,
+)
 
 AXIS = "clusters"
 
-#: sentinel accepted by ``offload(job, "resident", ...)``
+#: legacy sentinel accepted by ``offload(job, "resident", ...)`` — the
+#: typed spelling is ``repro.core.policy.Residency.RESIDENT``
 RESIDENT = "resident"
+
+
+def _is_resident(operands: Any, legacy_surface: str) -> bool:
+    """True when ``operands`` selects resident redispatch.
+
+    Accepts the typed :class:`Residency` enum silently and the legacy
+    ``"resident"`` string with a :class:`DeprecationWarning`; any other
+    string (or ``Residency.FRESH``, which names no buffers) is an error.
+    """
+    if isinstance(operands, Residency):
+        if operands is not Residency.RESIDENT:
+            raise ValueError(
+                f"{operands!r} is not a dispatchable operand mode; pass "
+                "an operand dict or Residency.RESIDENT")
+        return True
+    if isinstance(operands, str):
+        if operands != RESIDENT:
+            raise ValueError(f"unknown operands mode {operands!r}")
+        warn_legacy(f"{legacy_surface}(job, 'resident')",
+                    f"{legacy_surface}(job, Residency.RESIDENT)")
+        return True
+    return False
 
 
 #: valid phase-E staging strategies for replicated operands (see
@@ -153,25 +179,41 @@ STAGING_MODES = bc.STAGING_MODES
 
 @dataclasses.dataclass(frozen=True)
 class OffloadConfig:
-    """First-class framework feature: how jobs are dispatched (§4.2/§4.3)."""
+    """First-class framework feature: how jobs are dispatched (§4.2/§4.3).
 
-    info_dist: str = "multicast"       # "multicast" | "p2p_chain"
-    completion: str = "unit"           # "unit" | "central_counter"
+    Every mode field is validated on construction (a typo like
+    ``info_dist="mulicast"`` raises instead of silently misconfiguring
+    the run) and coerced to its :mod:`repro.core.policy` enum; raw
+    strings still work but raise :class:`DeprecationWarning` — the typed
+    session surface (``repro.api.OffloadPolicy``) is the replacement.
+    """
+
+    info_dist: InfoDist = InfoDist.MULTICAST
+    completion: Completion = Completion.UNIT
     donate_operands: bool = False
-    staging: str = "direct"            # default phase-E mode, see STAGING_MODES
+    staging: Staging = Staging.DIRECT  # default phase-E mode, see STAGING_MODES
 
     def __post_init__(self):
-        if self.staging not in STAGING_MODES:
-            raise ValueError(
-                f"staging {self.staging!r} not in {STAGING_MODES}")
+        coerce = object.__setattr__
+        coerce(self, "info_dist",
+               coerce_enum(InfoDist, self.info_dist, "info_dist",
+                           warn_legacy=True))
+        coerce(self, "completion",
+               coerce_enum(Completion, self.completion, "completion",
+                           warn_legacy=True))
+        coerce(self, "staging",
+               coerce_enum(Staging, self.staging, "staging",
+                           warn_legacy=True))
 
     @staticmethod
     def baseline() -> "OffloadConfig":
-        return OffloadConfig(info_dist="p2p_chain", completion="central_counter")
+        return OffloadConfig(info_dist=InfoDist.P2P_CHAIN,
+                             completion=Completion.CENTRAL_COUNTER)
 
     @staticmethod
     def extended() -> "OffloadConfig":
-        return OffloadConfig(info_dist="multicast", completion="unit")
+        return OffloadConfig(info_dist=InfoDist.MULTICAST,
+                             completion=Completion.UNIT)
 
 
 @dataclasses.dataclass
@@ -187,6 +229,14 @@ class PlanStats:
     h2d_bytes: int = 0            # logical host-link bytes (see broadcast.py)
     d2d_bytes: int = 0            # logical device-to-device fan-out bytes
     tree_stages: int = 0          # operand/arg stagings routed via the tree
+
+    def accumulate(self, other: "PlanStats") -> "PlanStats":
+        """Add ``other``'s counters into this instance (returns self) —
+        the one aggregation used by every stats rollup surface."""
+        for f in dataclasses.fields(PlanStats):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
 
 
 @dataclasses.dataclass
@@ -300,11 +350,12 @@ class DispatchPlan:
     def has_resident(self) -> bool:
         return len(self._resident) == len(self.op_meta) > 0 or not self.op_meta
 
-    def _resolve_via(self, via: Optional[str]) -> str:
-        via = self.runtime.config.staging if via is None else via
-        if via not in STAGING_MODES:
-            raise ValueError(f"staging {via!r} not in {STAGING_MODES}")
-        return via
+    def _resolve_via(self, via: Optional[Union[str, Staging]]) -> Staging:
+        if via is None:
+            return self.runtime.config.staging
+        if isinstance(via, Staging):
+            return via
+        return coerce_enum(Staging, via, "via", warn_legacy=True)
 
     def _tree_stager(self) -> bc.TreeStager:
         if self._stager is None:
@@ -348,7 +399,7 @@ class DispatchPlan:
     def stage(self, operands: Dict[str, np.ndarray], *,
               _caller_owned: bool = True,
               slot: Optional[int] = None,
-              via: Optional[str] = None) -> Dict[str, Any]:
+              via: Optional[Union[str, Staging]] = None) -> Dict[str, Any]:
         """Phase-E upload of ``operands``.
 
         With ``slot=None`` (default) the buffers become *resident* — the
@@ -430,7 +481,7 @@ class DispatchPlan:
         return dict(self._resident)
 
     def stage_args(self, job_args: np.ndarray, *,
-                   via: Optional[str] = None) -> Any:
+                   via: Optional[Union[str, Staging]] = None) -> Any:
         """Upload job args, skipping the transfer when the value is unchanged.
 
         Replicated job args (multicast mode) honour the ``via`` staging
@@ -506,9 +557,7 @@ class OffloadRuntime:
         replaced plans' counts are retained)."""
         agg = dataclasses.replace(self._retired_stats)
         for p in self._plans.values():
-            for f in dataclasses.fields(PlanStats):
-                setattr(agg, f.name,
-                        getattr(agg, f.name) + getattr(p.stats, f.name))
+            agg.accumulate(p.stats)
         return agg
 
     # -- cluster selection (paper §4.2 semantics) ---------------------------------
@@ -588,10 +637,7 @@ class OffloadRuntime:
                                 tuple(args_shape), fuse=fuse)
         if plan is not None:   # replaced: keep its counts (after the build
             # succeeded, so a failing build leaves the old plan untouched)
-            for f in dataclasses.fields(PlanStats):
-                setattr(self._retired_stats, f.name,
-                        getattr(self._retired_stats, f.name)
-                        + getattr(plan.stats, f.name))
+            self._retired_stats.accumulate(plan.stats)
         self._plans[key] = new_plan
         return new_plan
 
@@ -600,7 +646,7 @@ class OffloadRuntime:
     def offload(
         self,
         job: PaperJob,
-        operands: Union[Dict[str, np.ndarray], str],
+        operands: Union[Dict[str, np.ndarray], str, Residency],
         job_args: Optional[np.ndarray] = None,
         n: Optional[int] = None,
         request: Optional[mc.MulticastRequest] = None,
@@ -617,9 +663,7 @@ class OffloadRuntime:
             job_args = np.ones((8,), dtype=np.float64)
         job_args = np.asarray(job_args, dtype=np.float64)
 
-        resident = isinstance(operands, str)
-        if resident and operands != RESIDENT:
-            raise ValueError(f"unknown operands mode {operands!r}")
+        resident = _is_resident(operands, "offload")
         plan = self.plan(
             job, operands=None if resident else operands,
             n=n, request=request, clusters=clusters,
@@ -640,31 +684,55 @@ class OffloadRuntime:
     def offload_fused(
         self,
         job: PaperJob,
-        instances: Union[Sequence[Dict[str, np.ndarray]], str],
+        instances: Union[Sequence[Dict[str, np.ndarray]], str, Residency],
         job_args: Optional[np.ndarray] = None,
         n: Optional[int] = None,
         request: Optional[mc.MulticastRequest] = None,
         clusters: Optional[Sequence[int]] = None,
         batch: Optional[int] = None,
     ) -> FusedHandle:
+        """Deprecated direct entry point — fuse B instances into one launch.
+
+        The session API subsumes this: ``Session.submit(job, instances,
+        policy=OffloadPolicy(fuse=B))`` (or ``policy=AUTO`` to let the
+        planner pick B).  Kept as a warning shim over the same
+        implementation.
+        """
+        warn_legacy("direct OffloadRuntime.offload_fused()",
+                    "Session.submit(job, instances, policy=...)")
+        return self._offload_fused(job, instances, job_args=job_args, n=n,
+                                   request=request, clusters=clusters,
+                                   batch=batch)
+
+    def _offload_fused(
+        self,
+        job: PaperJob,
+        instances: Union[Sequence[Dict[str, np.ndarray]], str, Residency],
+        job_args: Optional[np.ndarray] = None,
+        n: Optional[int] = None,
+        request: Optional[mc.MulticastRequest] = None,
+        clusters: Optional[Sequence[int]] = None,
+        batch: Optional[int] = None,
+        staging: Optional[Staging] = None,
+    ) -> FusedHandle:
         """Fuse B instances of ``job`` into one XLA launch.
 
         ``instances`` is a sequence of B operand dicts (stacked host-side
         along a new leading batch axis and phase-E staged as one transfer
-        per operand) or ``"resident"`` to redispatch the previously staged
-        batch (``batch=B`` then selects the fused plan).  ``job_args`` may
-        be one (A,) vector shared by all jobs or a (B, A) array of per-job
-        args.  Returns a :class:`FusedHandle` whose ``wait()`` yields the
-        stacked (B, ...) results.
+        per operand) or ``Residency.RESIDENT`` to redispatch the
+        previously staged batch (``batch=B`` then selects the fused plan).
+        ``job_args`` may be one (A,) vector shared by all jobs or a (B, A)
+        array of per-job args.  ``staging`` picks the phase-E strategy for
+        the stacked replicated operands (default: the runtime config's).
+        Returns a :class:`FusedHandle` whose ``wait()`` yields the stacked
+        (B, ...) results.
 
         The host pays ~1/B of the per-job dispatch cost while the lowered
         program's collective count stays independent of B (asserted by
         tests over ``lowered_text(job, n, fuse=B)``).
         """
-        resident = isinstance(instances, str)
+        resident = _is_resident(instances, "offload_fused")
         if resident:
-            if instances != RESIDENT:
-                raise ValueError(f"unknown operands mode {instances!r}")
             if batch is None:
                 raise ValueError("resident fused dispatch needs batch=B")
             B = batch
@@ -690,11 +758,11 @@ class OffloadRuntime:
             n=n, request=request, clusters=clusters,
             args_shape=job_args.shape, fuse=B,
         )
-        args_dev = plan.stage_args(job_args)
+        args_dev = plan.stage_args(job_args, via=staging)
         # the stacked dict is ours (fresh arrays from stack_instances), so
         # donation needs no defensive snapshot of it
         op_dev = (plan.resident_operands() if resident
-                  else plan.stage(stacked, _caller_owned=False))
+                  else plan.stage(stacked, _caller_owned=False, via=staging))
         handle = self._launch(plan, args_dev, op_dev)
         return FusedHandle(handle.job_id, handle.result, handle.arrivals,
                            plan.n_clusters, handle.dispatched_at, self,

@@ -1,0 +1,166 @@
+"""Typed offload policies — the session API's vocabulary.
+
+The runtime grew four stringly-typed mode knobs across PRs 1–3: the
+``"resident"`` operand sentinel, ``OffloadConfig.info_dist`` /
+``.completion`` raw strings, and the ``staging`` / ``via=`` strategy
+strings threaded through ``DispatchPlan.stage``, ``OffloadStream`` and
+``ServeConfig``.  A typo in any of them (``info_dist="mulicast"``) used to
+silently misconfigure the run.  This module replaces them with enums —
+string-valued, so they compare and hash like their legacy spellings and
+flow through every existing code path — and bundles them, together with
+the fusion/pipelining knobs that used to be separate *methods*
+(``offload_fused``, ``OffloadStream``), into one immutable
+:class:`OffloadPolicy`.
+
+``AUTO`` is the headline policy: every decidable field is left ``None``
+and the session planner (:mod:`repro.core.session`) fills it in from the
+simulator's dispatch and staging cost models — mode selection driven by
+the paper's quantitative runtime model (§6; Colagrande & Benini,
+arXiv:2404.01908) instead of per-call hardcoding.
+
+Legacy raw strings are still accepted everywhere (coerced, validated)
+but raise :class:`DeprecationWarning` — the validated deprecation shims
+of the migration path documented in the README's "Session API" section.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import warnings
+from typing import Optional, Type, TypeVar, Union
+
+
+class Staging(str, enum.Enum):
+    """Phase-E placement strategy for replicated operands.
+
+    Mirrors ``repro.core.broadcast.STAGING_MODES`` (the legacy string
+    surface) member for member; see ``DispatchPlan.stage`` for the data
+    paths.
+    """
+
+    DIRECT = "direct"            # one replicated device_put (O(n) host link)
+    HOST_FANOUT = "host_fanout"  # explicit sequential O(n) baseline
+    TREE = "tree"                # hierarchical broadcast: O(1) host link
+    TREE_RESHARD = "tree_reshard"  # tree root upload + resharding fast path
+
+
+class Residency(str, enum.Enum):
+    """Whether a submit stages fresh operands or reuses resident buffers."""
+
+    FRESH = "fresh"              # phase-E stage the passed operands
+    RESIDENT = "resident"        # reuse the plan's resident device buffers
+
+
+class InfoDist(str, enum.Enum):
+    """Job-information distribution (paper §4.2)."""
+
+    MULTICAST = "multicast"      # replicated job info, O(log n) broadcast
+    P2P_CHAIN = "p2p_chain"      # the baseline's O(n) collective-permute chain
+
+
+class Completion(str, enum.Enum):
+    """Job-completion synchronization (paper §4.3)."""
+
+    UNIT = "unit"                # the job completion unit (fused psum)
+    CENTRAL_COUNTER = "central_counter"  # software central-counter chain
+
+
+_E = TypeVar("_E", bound=enum.Enum)
+
+
+def coerce_enum(enum_cls: Type[_E], value: Union[str, _E], field: str,
+                *, warn_legacy: bool = False) -> _E:
+    """Validate ``value`` as a member of ``enum_cls`` (coercing strings).
+
+    With ``warn_legacy=True`` a raw string (the pre-session spelling)
+    additionally raises a :class:`DeprecationWarning` pointing at the
+    typed replacement — enum members always pass silently.  An unknown
+    value raises :class:`ValueError` naming the valid set, so a typo like
+    ``info_dist="mulicast"`` fails loudly instead of misconfiguring the
+    run.
+    """
+    if isinstance(value, enum_cls):
+        return value
+    try:
+        member = enum_cls(value)
+    except ValueError:
+        valid = tuple(m.value for m in enum_cls)
+        raise ValueError(
+            f"{field} {value!r} not in {valid}") from None
+    if warn_legacy:
+        warnings.warn(
+            f"passing {field} as a raw string ({value!r}) is deprecated; "
+            f"use {enum_cls.__name__}.{member.name} (repro.api)",
+            DeprecationWarning, stacklevel=3)
+    return member
+
+
+def warn_legacy(old: str, new: str) -> None:
+    """One legacy-surface deprecation warning, uniformly worded."""
+    warnings.warn(f"{old} is deprecated; use {new} (repro.api)",
+                  DeprecationWarning, stacklevel=3)
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadPolicy:
+    """How a session submit is dispatched — every mode knob in one place.
+
+    ``None`` in a decidable field (``staging``, ``fuse``, ``window``)
+    means *let the planner decide from the cost models*; the module-level
+    :data:`AUTO` policy leaves all three open.  Explicit values pin the
+    decision (the typed spelling of every legacy hand-picked mode):
+
+    * ``staging`` — phase-E strategy for replicated operands.
+    * ``residency`` — ``FRESH`` stages the passed operands; ``RESIDENT``
+      redispatches the plan's resident buffers (zero ``device_put``).
+    * ``info_dist`` / ``completion`` — the paper's two implementations
+      (§4.2/§4.3); defaults are the extended (multicast + unit) system.
+    * ``fuse`` — dispatch batching factor B: B job instances stacked into
+      one XLA launch (1 = no fusion).  Replaces ``offload_fused``.
+    * ``window`` — in-flight pipeline window (1 = synchronous).  Replaces
+      the ``OffloadStream`` constructor knob; capped by the runtime's
+      completion-unit copies at submit time.
+    * ``depth`` — staging buffer slots for the pipelined upload overlap.
+    * ``donate_operands`` — XLA buffer donation, as in ``OffloadConfig``.
+    """
+
+    staging: Optional[Staging] = None
+    residency: Residency = Residency.FRESH
+    info_dist: InfoDist = InfoDist.MULTICAST
+    completion: Completion = Completion.UNIT
+    fuse: Optional[int] = None
+    window: Optional[int] = None
+    depth: int = 2
+    donate_operands: bool = False
+
+    def __post_init__(self):
+        coerce = object.__setattr__
+        if self.staging is not None:
+            coerce(self, "staging",
+                   coerce_enum(Staging, self.staging, "staging"))
+        coerce(self, "residency",
+               coerce_enum(Residency, self.residency, "residency"))
+        coerce(self, "info_dist",
+               coerce_enum(InfoDist, self.info_dist, "info_dist"))
+        coerce(self, "completion",
+               coerce_enum(Completion, self.completion, "completion"))
+        for field, lo in (("fuse", 1), ("window", 1), ("depth", 1)):
+            v = getattr(self, field)
+            if v is not None and (not isinstance(v, int) or v < lo):
+                raise ValueError(f"{field} must be an int >= {lo}, got {v!r}")
+
+    @property
+    def decided(self) -> bool:
+        """True when no field is left for the planner."""
+        return None not in (self.staging, self.fuse, self.window)
+
+    def pinned(self, **fields) -> "OffloadPolicy":
+        """A copy with ``fields`` replaced (typed ``dataclasses.replace``)."""
+        return dataclasses.replace(self, **fields)
+
+
+#: The model-driven policy: the planner picks staging mode, fusion factor
+#: B, and in-flight window from the simulator's cost models, per
+#: job-shape and cluster count.
+AUTO = OffloadPolicy()

@@ -44,8 +44,9 @@ import numpy as np
 
 from repro.core.jobs import PaperJob
 from repro.core.offload import (
-    DispatchPlan, JobHandle, OffloadRuntime, STAGING_MODES,
+    DispatchPlan, JobHandle, OffloadRuntime, _is_resident,
 )
+from repro.core.policy import Staging, coerce_enum, warn_legacy
 from repro.core import multicast as mc
 
 
@@ -53,7 +54,13 @@ class OffloadStream:
     """An async job queue over :class:`OffloadRuntime` with pipelined
     staging.  One stream drives one (job, cluster selection) pair — the
     regime where a dispatch plan is warm and the only per-job costs left
-    are staging and launch."""
+    are staging and launch.
+
+    Direct construction is deprecated: the session API
+    (``repro.api.Session``) pipelines every submit through this machinery
+    with the window/depth/staging knobs carried by the typed
+    ``OffloadPolicy`` (and picked by the planner under ``AUTO``).
+    """
 
     def __init__(self, runtime: OffloadRuntime, job: PaperJob, *,
                  n: Optional[int] = None,
@@ -61,14 +68,19 @@ class OffloadStream:
                  clusters: Optional[Sequence[int]] = None,
                  depth: int = 2,
                  window: Optional[int] = None,
-                 staging: Optional[str] = None):
+                 staging: Optional[Staging] = None,
+                 _warn: bool = True):
+        if _warn:
+            warn_legacy("direct OffloadStream construction",
+                        "Session.submit(job, operands, policy=...)")
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         if window is not None and window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
-        if staging is not None and staging not in STAGING_MODES:
-            raise ValueError(
-                f"staging {staging!r} not in {STAGING_MODES}")
+        if staging is not None:
+            # enum members pass silently; raw strings warn (legacy surface)
+            staging = coerce_enum(Staging, staging, "staging",
+                                  warn_legacy=True)
         self.runtime = runtime
         self.job = job
         self._sel = dict(n=n, request=request, clusters=clusters)
@@ -109,9 +121,7 @@ class OffloadStream:
         if job_args is None:
             job_args = np.ones((8,), dtype=np.float64)
         job_args = np.asarray(job_args, dtype=np.float64)
-        resident = isinstance(operands, str)
-        if resident and operands != "resident":
-            raise ValueError(f"unknown operands mode {operands!r}")
+        resident = _is_resident(operands, "submit")
         if self.plan is None:
             self.plan = self.runtime.plan(
                 self.job, None if resident else operands,

@@ -17,11 +17,10 @@ import time
 
 import numpy as np
 
+from repro.api import ServeConfig, ServeEngine, Staging
 from repro.data import DataConfig, SyntheticStream
-from repro.dist.sharding import param_specs, to_shardings
 from repro.launch.mesh import make_mesh
-from repro.models import CallConfig, get, init_params, reduced
-from repro.serve import ServeConfig, ServeEngine
+from repro.models import get, init_params, reduced
 
 import jax
 
@@ -42,6 +41,10 @@ def main() -> None:
                          "or the legacy host round-trip")
     ap.add_argument("--decode-chunk", type=int, default=8,
                     help="tokens per dispatch in chunk mode")
+    ap.add_argument("--staging", default="direct",
+                    choices=["direct", "tree", "tree_reshard"],
+                    help="replicated-placement strategy for weights and "
+                         "prefill inserts (repro.api.Staging)")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching: stream --requests variable-"
                          "length prompts through the slot scheduler")
@@ -58,16 +61,18 @@ def main() -> None:
     d, m = (int(x) for x in args.mesh.split("x"))
     mesh = make_mesh((d, m), ("data", "model"))
 
-    params = init_params(jax.random.key(args.seed), cfg)
-    pspecs = param_specs(params, mesh)
-    params = jax.device_put(params, to_shardings(pspecs, mesh))
+    params = jax.device_get(init_params(jax.random.key(args.seed), cfg))
 
     scfg = ServeConfig(batch=args.batch,
                        max_len=args.prompt_len + args.new_tokens + 1,
                        temperature=args.temperature, seed=args.seed,
                        decode_mode=args.decode_mode,
-                       decode_chunk=args.decode_chunk)
+                       decode_chunk=args.decode_chunk,
+                       staging=Staging(args.staging))
     engine = ServeEngine(cfg, params, mesh, scfg)
+    # weight placement honours --staging: under "tree" every replicated
+    # leaf crosses the host link once and fans out device-to-device
+    engine.place_params(params)
 
     if args.continuous:
         rng = np.random.default_rng(args.seed)

@@ -54,6 +54,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import broadcast as bc
 from repro.core.completion import CompletionUnit
+from repro.core.policy import Staging, coerce_enum
 from repro.dist.sharding import batch_specs, cache_specs, param_specs, to_shardings
 from repro.models.config import ModelConfig
 from repro.models.model import (
@@ -264,22 +265,34 @@ class ServeConfig:
     decode_chunk: int = 8            # tokens per dispatch in "chunk" mode
     prefill_bucket: int = 16         # generate_many pads prefills to this
                                      # granularity (bounds compile count)
-    staging: str = "direct"          # replicated-placement strategy for
+    staging: Staging = Staging.DIRECT  # replicated-placement strategy for
                                      # weight placement and prefill inserts:
-                                     # "direct" | "tree" | "tree_reshard"
-                                     # (repro.core.broadcast semantics; the
+                                     # DIRECT | TREE | TREE_RESHARD
+                                     # (repro.core.policy.Staging; the
                                      # serialized host_fanout baseline is an
                                      # offload-runtime measurement device,
-                                     # not a serving mode)
+                                     # not a serving mode).  Raw strings are
+                                     # accepted with a DeprecationWarning.
 
     def __post_init__(self):
-        valid = tuple(m for m in bc.STAGING_MODES if m != "host_fanout")
-        if self.staging not in valid:
-            raise ValueError(f"staging {self.staging!r} not in {valid}")
+        self.staging = coerce_enum(Staging, self.staging, "staging",
+                                   warn_legacy=True)
+        if self.staging is Staging.HOST_FANOUT:
+            valid = tuple(m.value for m in Staging if m is not Staging.HOST_FANOUT)
+            raise ValueError(f"staging {self.staging.value!r} not in {valid}")
 
 
 class ServeEngine:
-    """Static-batch decode engine with per-slot generation state."""
+    """Static-batch decode engine with per-slot generation state.
+
+    ``params`` may be device-resident (already placed on the mesh) or a
+    host pytree; in the latter case call :meth:`place_params` before
+    generating — it places the weights under ``scfg.staging`` (the tree
+    modes send every replicated leaf over the host link once) and
+    records the link bytes in ``stats``.  Skipping it still works (jit
+    re-places host params per dispatch) but bypasses the configured
+    staging strategy and its byte accounting.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Pytree, mesh: Mesh,
                  scfg: ServeConfig, call: CallConfig = CallConfig(moe_no_drop=True)):

@@ -1,0 +1,114 @@
+"""Public-API surface snapshot (ISSUE-4 satellite).
+
+``repro.api`` is the framework's stable surface.  This test pins its
+exported names and the parameter lists of every public callable, so a
+refactor that silently renames a parameter, drops an export, or changes
+a default's *presence* fails here — loudly — instead of breaking
+downstream callers.  Intentional surface changes update SNAPSHOT in the
+same commit.
+"""
+
+import enum
+import inspect
+
+import repro.api as api
+
+
+def _params(fn):
+    """Parameter names with a ``=`` suffix for defaulted ones."""
+    out = []
+    for p in inspect.signature(fn).parameters.values():
+        if p.name.startswith("_") or p.name == "self":
+            continue
+        name = p.name
+        if p.kind is inspect.Parameter.VAR_POSITIONAL:
+            name = "*" + name
+        elif p.kind is inspect.Parameter.VAR_KEYWORD:
+            name = "**" + name
+        elif p.default is not inspect.Parameter.empty:
+            name += "="
+        out.append(name)
+    return tuple(out)
+
+
+EXPORTS = (
+    "AUTO", "Completion", "Estimate", "Explain", "InfoDist", "JobHandle",
+    "MulticastRequest", "OffloadConfig", "OffloadPolicy", "OffloadRuntime",
+    "PAPER_JOBS", "PaperJob", "PlanDecision", "PlanStats", "Planner",
+    "Residency", "ServeConfig", "ServeEngine", "Session", "SessionHandle",
+    "Staging", "estimate", "make_instances", "predict_staging",
+)
+
+ENUMS = {
+    "Staging": ("DIRECT", "HOST_FANOUT", "TREE", "TREE_RESHARD"),
+    "Residency": ("FRESH", "RESIDENT"),
+    "InfoDist": ("MULTICAST", "P2P_CHAIN"),
+    "Completion": ("UNIT", "CENTRAL_COUNTER"),
+}
+
+SNAPSHOT = {
+    "OffloadPolicy": ("staging=", "residency=", "info_dist=", "completion=",
+                      "fuse=", "window=", "depth=", "donate_operands="),
+    "OffloadPolicy.pinned": ("**fields",),
+    "OffloadConfig": ("info_dist=", "completion=", "donate_operands=",
+                      "staging="),
+    "Planner": ("params=", "max_fuse=", "tree_min_bytes="),
+    "Planner.decide": ("job", "clusters", "batch", "policy", "n_units",
+                       "operands="),
+    "Session": ("devices=", "policy=", "n_units=", "params=", "planner=",
+                "runtime="),
+    "Session.submit": ("job", "operands", "policy=", "job_args=", "n=",
+                       "request=", "clusters="),
+    "Session.estimate": ("job", "batch=", "policy=", "n=", "clusters=",
+                         "operands="),
+    "Session.stage": ("job", "operands", "policy=", "n=", "request=",
+                      "clusters="),
+    "Session.drain": (),
+    "Session.runtime": ("policy=",),
+    "SessionHandle.wait": (),
+    "SessionHandle.explain": (),
+    "estimate": ("job", "n=", "clusters=", "batch=", "policy=", "n_units=",
+                 "params=", "operands=", "planner="),
+    "predict_staging": ("nbytes", "clusters", "staging", "params="),
+    "OffloadRuntime.offload": ("job", "operands", "job_args=", "n=",
+                               "request=", "clusters="),
+    "ServeConfig": ("batch=", "max_len=", "temperature=", "seed=",
+                    "decode_mode=", "decode_chunk=", "prefill_bucket=",
+                    "staging="),
+    "ServeEngine.generate": ("prompts", "n_new", "extra_inputs="),
+    "ServeEngine.generate_many": ("requests", "arrival_steps="),
+}
+
+
+def test_exported_names():
+    assert tuple(sorted(api.__all__)) == EXPORTS
+    for name in EXPORTS:
+        assert hasattr(api, name), name
+
+
+def test_enum_members_pinned():
+    for name, members in ENUMS.items():
+        cls = getattr(api, name)
+        assert issubclass(cls, enum.Enum)
+        assert tuple(m.name for m in cls) == members, name
+
+
+def test_auto_policy_shape():
+    assert isinstance(api.AUTO, api.OffloadPolicy)
+    assert api.AUTO.staging is None
+    assert api.AUTO.fuse is None
+    assert api.AUTO.window is None
+
+
+def test_signatures_pinned():
+    mismatches = {}
+    for path, expected in SNAPSHOT.items():
+        obj = api
+        for part in path.split("."):
+            obj = getattr(obj, part)
+        got = _params(obj)
+        if got != expected:
+            mismatches[path] = got
+    assert not mismatches, (
+        "public-API signature drift — update tests/test_api_surface.py "
+        f"SNAPSHOT intentionally: {mismatches}")

@@ -1,0 +1,126 @@
+"""Typed policy surface: enums, OffloadPolicy/OffloadConfig validation,
+and the legacy-string deprecation shims (ISSUE-4 satellites)."""
+
+import warnings
+
+import pytest
+
+from repro.core import broadcast as bc
+from repro.core.policy import (
+    AUTO, Completion, InfoDist, OffloadPolicy, Residency, Staging,
+)
+
+
+def _deprecations(records):
+    return [w for w in records if issubclass(w.category, DeprecationWarning)]
+
+
+def test_enum_values_match_legacy_strings():
+    """str-mixin enums ARE their legacy spellings: equality, hashing and
+    membership against the canonical string tuples keep working."""
+    assert tuple(m.value for m in Staging) == bc.STAGING_MODES
+    assert Staging.TREE == "tree" and "tree" == Staging.TREE
+    assert Staging.TREE in bc.STAGING_MODES
+    assert Staging.TREE in bc.TREE_MODES
+    assert hash(Staging.HOST_FANOUT) == hash("host_fanout")
+    assert InfoDist.MULTICAST == "multicast"
+    assert InfoDist.P2P_CHAIN == "p2p_chain"
+    assert Completion.UNIT == "unit"
+    assert Completion.CENTRAL_COUNTER == "central_counter"
+    assert Residency.RESIDENT == "resident"
+
+
+def test_offload_policy_validation_and_auto():
+    # the new surface accepts strings (coerced silently) and enums alike
+    p = OffloadPolicy(staging="tree", info_dist="p2p_chain",
+                      completion=Completion.CENTRAL_COUNTER)
+    assert p.staging is Staging.TREE
+    assert p.info_dist is InfoDist.P2P_CHAIN
+    for bad in (dict(fuse=0), dict(window=0), dict(depth=0),
+                dict(fuse=-2), dict(window="wide")):
+        with pytest.raises(ValueError):
+            OffloadPolicy(**bad)
+    with pytest.raises(ValueError):
+        OffloadPolicy(staging="mulitcast")
+    with pytest.raises(ValueError):
+        OffloadPolicy(residency="sticky")
+    # AUTO leaves every decidable field to the planner
+    assert AUTO.staging is None and AUTO.fuse is None and AUTO.window is None
+    assert not AUTO.decided
+    pinned = AUTO.pinned(staging=Staging.TREE, fuse=2, window=1)
+    assert pinned.decided and pinned is not AUTO
+    # policies hash (estimate-cache keys, dict keys)
+    assert hash(pinned) == hash(AUTO.pinned(staging="tree", fuse=2, window=1))
+
+
+def test_offload_config_validates_every_field():
+    """Satellite: info_dist and completion are validated, not just
+    staging — a typo raises instead of silently misconfiguring."""
+    from repro.core.offload import OffloadConfig
+
+    with pytest.raises(ValueError, match="info_dist"):
+        OffloadConfig(info_dist="mulicast")
+    with pytest.raises(ValueError, match="completion"):
+        OffloadConfig(completion="central-counter")
+    with pytest.raises(ValueError, match="staging"):
+        OffloadConfig(staging="treee")
+
+
+def test_offload_config_string_shim_warns_enums_do_not():
+    from repro.core.offload import OffloadConfig
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = OffloadConfig(staging="tree")
+    assert _deprecations(w), "raw-string staging should deprecation-warn"
+    assert cfg.staging is Staging.TREE          # ...but still configure
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        OffloadConfig(staging=Staging.TREE,
+                      info_dist=InfoDist.P2P_CHAIN,
+                      completion=Completion.CENTRAL_COUNTER)
+        OffloadConfig.baseline()
+        OffloadConfig.extended()
+        OffloadConfig()
+    assert not _deprecations(w), "typed construction must stay silent"
+
+
+def test_offload_config_equality_across_spellings():
+    """Coercion normalizes: a legacy-string config and its typed twin are
+    the same plan/compile cache key."""
+    from repro.core.offload import OffloadConfig
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = OffloadConfig(info_dist="p2p_chain",
+                               completion="central_counter",
+                               staging="tree")
+    typed = OffloadConfig(info_dist=InfoDist.P2P_CHAIN,
+                          completion=Completion.CENTRAL_COUNTER,
+                          staging=Staging.TREE)
+    assert legacy == typed and hash(legacy) == hash(typed)
+
+
+def test_serve_config_staging_typed():
+    from repro.serve import ServeConfig
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = ServeConfig(staging="tree")
+    assert _deprecations(w)
+    assert cfg.staging is Staging.TREE
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ServeConfig(staging=Staging.TREE_RESHARD)
+        ServeConfig()
+    assert not _deprecations(w)
+    # host_fanout is an offload-runtime measurement device, not a serving
+    # mode — still rejected under both spellings
+    with pytest.raises(ValueError):
+        ServeConfig(staging=Staging.HOST_FANOUT)
+    with pytest.raises(ValueError), warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ServeConfig(staging="host_fanout")
+    with pytest.raises(ValueError):
+        ServeConfig(staging="ttree")

@@ -1,0 +1,470 @@
+"""The unified session API: one submit path, typed policies, AUTO
+planner, and the <15 %-error estimate contract (ISSUE-4 tentpole).
+
+Model-level tests run in-process (pure arithmetic, no devices); dispatch
+tests run in an 8-device subprocess like the rest of the offload suite.
+The recorded-benchmark tests pin the acceptance criteria against
+``BENCH_offload.json``: every ``Session.estimate`` prediction within the
+paper's 15 % bar on the recorded points, and ``policy=AUTO`` never
+slower than the best hand-picked legacy mode on the recorded ``stream``,
+``staging``, and ``fused`` suites.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core import jobs, simulator
+from repro.core.policy import AUTO, OffloadPolicy, Residency, Staging
+from repro.core.session import Planner, estimate, predict_staging
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH = os.path.join(REPO, "BENCH_offload.json")
+
+NS = (1, 2, 4, 8, 16, 32)
+
+#: wallclock guard between separately-timed rows: this substrate (an
+#: 8-device XLA mesh on a small CPU share) oscillates +-30% on
+#: multi-second timescales — two timings of the *identical* submit
+#: configuration measure 0.7x-1.4x apart (see the stream child's
+#: round-robin note).  The strict acceptance claims below are therefore
+#: the deterministic ones (decision identity, cycle-domain regret); the
+#: wallclock comparisons only guard against a real regression hiding
+#: under the noise.
+WALL_TOL = 0.75
+
+
+def _bench_rows(suite):
+    with open(BENCH) as f:
+        data = json.load(f)
+    entry = data["suites"].get(suite)
+    if entry is None or "rows" not in entry:
+        pytest.skip(f"suite {suite} not recorded in BENCH_offload.json")
+    return {r["name"]: r["value"] for r in entry["rows"]}
+
+
+# ---------------------------------------------------------------------------
+# The estimate contract (model-level, in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_under_bar_every_job_every_n():
+    """Session.estimate stays under the paper's 15 % bar across all six
+    kernels and the full cluster sweep (the fig.-12 validation, through
+    the session surface)."""
+    cases = (jobs.make_axpy(1024), jobs.make_atax(64, 64),
+             jobs.make_matmul(16, 16, 16), jobs.make_covariance(32, 64),
+             jobs.make_montecarlo(16384), jobs.make_bfs(256))
+    worst = 0.0
+    for job in cases:
+        for n in NS:
+            est = estimate(job, n=n, policy=AUTO)
+            sim = simulator.simulate(job.spec, n, "multicast").total
+            worst = max(worst, simulator.model_error(est.job_cycles, sim))
+    assert worst < 0.15, f"estimate model error {worst * 100:.1f}% >= 15%"
+
+
+def test_estimate_vs_recorded_fig09_points():
+    """Satellite: predictions within 15 % of the *recorded* runtime
+    points (fig. 9 multicast curves in BENCH_offload.json)."""
+    rows = _bench_rows("fig09")
+    cases = {"axpy": jobs.make_axpy(1024), "atax": jobs.make_atax(64, 64)}
+    checked = 0
+    for label, job in cases.items():
+        for n in NS:
+            rec = rows.get(f"fig09/{label}/multicast/n={n}")
+            if rec is None:
+                continue
+            est = estimate(job, n=n, policy=AUTO)
+            assert simulator.model_error(est.job_cycles, rec) < 0.15, (
+                label, n, est.job_cycles, rec)
+            checked += 1
+    assert checked >= 10
+
+
+def test_predict_staging_vs_recorded_bench_points():
+    """Satellite: every recorded staging point predicted within 15 % —
+    the closed-form contract against the recorded discrete-event grid."""
+    rows = _bench_rows("staging")
+    checked = 0
+    for name, rec in rows.items():
+        if name.endswith("/model_error") or "/hf_over_tree/" in name:
+            continue
+        # staging/{kib}KiB/{mode}/n={n}
+        _, kib, mode, npart = name.split("/")
+        nbytes = int(kib[:-3]) * 1024
+        n = int(npart.split("=")[1])
+        pred = predict_staging(nbytes, n, Staging(mode))
+        assert simulator.model_error(pred, rec) < 0.15, (name, pred, rec)
+        checked += 1
+    assert checked >= 30
+
+
+def test_estimate_baseline_policy_and_validation():
+    job = jobs.make_axpy(1024)
+    base = estimate(job, n=8,
+                    policy=OffloadPolicy(info_dist="p2p_chain"))
+    ext = estimate(job, n=8, policy=AUTO)
+    sim = simulator.simulate(job.spec, 8, "baseline").total
+    assert base.job_cycles == pytest.approx(sim)
+    assert base.job_cycles > ext.job_cycles      # the paper's headline
+    with pytest.raises(ValueError):
+        estimate(job)                            # n xor clusters
+    with pytest.raises(ValueError):
+        estimate(job, n=8, clusters=[0, 1])
+    with pytest.raises(ValueError):
+        estimate(job, n=0)
+    with pytest.raises(ValueError):
+        estimate(job, n=8, batch=0)
+
+
+# ---------------------------------------------------------------------------
+# The AUTO planner (model-level, in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_planner_staging_decision():
+    planner = Planner()
+    # nothing replicated / single cluster -> nothing to fan out
+    assert planner.pick_staging(0, 8) is Staging.DIRECT
+    assert planner.pick_staging(1 << 20, 1) is Staging.DIRECT
+    # the broadcast class at real widths rides the tree (cycle domain)
+    for n in (4, 8, 16, 32):
+        assert planner.pick_staging(64 * 1024, n) is Staging.TREE, n
+
+
+def test_planner_substrate_tree_guard():
+    """decide() only rides the tree once the replicated footprint is in
+    the bandwidth-bound regime (Planner.TREE_MIN_BYTES); a model-faithful
+    planner (tree_min_bytes=0) follows the cycle model everywhere."""
+    small = jobs.make_covariance(32, 64)        # 16 KiB replicated
+    big = jobs.make_covariance(1024, 2048)      # 16 MiB replicated
+    default = Planner()
+    assert default.decide(small, 8, 1, AUTO, 4).staging is Staging.DIRECT
+    assert default.decide(big, 8, 1, AUTO, 4).staging is Staging.TREE
+    faithful = Planner(tree_min_bytes=0)
+    assert faithful.decide(small, 8, 1, AUTO, 4).staging is Staging.TREE
+    # a pinned policy overrides the guard in either direction
+    pinned = default.decide(small, 8, 1, AUTO.pinned(staging=Staging.TREE), 4)
+    assert pinned.staging is Staging.TREE
+
+
+def test_planner_fuse_and_window_decisions():
+    planner = Planner()
+    fine = jobs.make_axpy(16384).spec        # dispatch/staging-bound
+    coarse = jobs.make_matmul(256, 256, 256).spec  # compute-bound
+    assert planner.pick_fuse(fine, 8, batch=32) == 8
+    assert planner.pick_fuse(coarse, 8, batch=32) == 1
+    assert planner.pick_fuse(fine, 8, batch=1) == 1   # nothing to fuse
+    assert planner.pick_fuse(fine, 8, batch=3) == 2   # capped by batch
+    # window: bounded by completion units and by the launch count
+    assert planner.pick_window(batch=1, fuse=1, n_units=4) == 4
+    assert planner.pick_window(batch=32, fuse=1, n_units=4) == 4
+    assert planner.pick_window(batch=32, fuse=8, n_units=8) == 4
+    assert planner.pick_window(batch=8, fuse=8, n_units=4) == 1
+    # resident single-job redispatch cannot fuse
+    d = planner.decide(jobs.make_axpy(1024), 8, 1,
+                       AUTO.pinned(residency=Residency.RESIDENT), 4)
+    assert d.fuse == 1 and d.staging is Staging.DIRECT
+
+
+def test_auto_staging_never_slower_on_recorded_grid():
+    """Acceptance: AUTO's staging pick, evaluated point-by-point on the
+    recorded staging suite, never loses to either hand-picked data
+    path (exact, deterministic cycles)."""
+    rows = _bench_rows("staging")
+    planner = Planner()
+    checked = 0
+    for kib in (4, 64, 1024):
+        for n in NS:
+            by_mode = {m: rows.get(f"staging/{kib}KiB/{m}/n={n}")
+                       for m in ("host_fanout", "tree")}
+            if None in by_mode.values():
+                continue
+            pick = planner.pick_staging(kib * 1024, n)
+            chosen = by_mode["tree" if pick in (Staging.TREE,
+                                                Staging.TREE_RESHARD)
+                             else "host_fanout"]
+            assert chosen <= min(by_mode.values()), (kib, n, pick, by_mode)
+            checked += 1
+    assert checked >= 12
+
+
+def test_auto_never_slower_on_recorded_stream_and_fused():
+    """Acceptance: AUTO's fusion/pipeline configuration against the
+    recorded ``stream`` suite — the planner's pick must match (fused
+    regime) or measure at least as fast as (wallclock rows, within the
+    measurement-noise allowance) the best hand-picked legacy mode."""
+    rows = _bench_rows("stream")
+
+    # fused regime (fine-grained axpy): the recorded AUTO pick must be
+    # the B whose recorded per-job dispatch is the minimum of every
+    # hand-picked mode, including the unfused resident baseline
+    pick = int(rows["stream/fused/auto_fuse_pick"])
+    b_rows = {b: rows[f"stream/fused/B{b}/dispatch"] for b in (1, 2, 4, 8)}
+    legacy_best = min(min(b_rows.values()),
+                      rows["stream/fused/resident_single_dispatch"])
+    assert b_rows[pick] <= legacy_best, (pick, b_rows)
+
+    # model side of the same claim, independent of the recording
+    assert Planner().pick_fuse(jobs.make_axpy(16384).spec, 8, 8) == pick
+
+    # stream regime (compute-bound matmul, fresh operands): AUTO's
+    # recorded decision IS the best hand-picked configuration — the
+    # pipelined, unfused mode (strict; the two dispatch through the same
+    # stream machinery, so equality of configuration is equality of
+    # mode).  The recorded wallclock row additionally sits within the
+    # substrate-noise guard of the best fresh-staging legacy row.
+    assert int(rows["stream/matmul256/8dev/auto/fuse"]) == 1
+    assert int(rows["stream/matmul256/8dev/auto/window"]) > 1
+    best_fresh = max(rows["stream/matmul256/8dev/seq_restage"],
+                     rows["stream/matmul256/8dev/pipelined"])
+    assert rows["stream/matmul256/8dev/auto"] >= best_fresh * WALL_TOL
+
+    # resident regime: the open window (what AUTO picks for streaming
+    # submits) beats — or ties within noise — the sequential mode
+    assert (rows["stream/matmul256/8dev/pipelined_resident"]
+            >= rows["stream/matmul256/8dev/seq_resident"] * WALL_TOL)
+
+
+# ---------------------------------------------------------------------------
+# The one submit path (dispatch-level, 8-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_session_single_multi_resident_paths(subproc):
+    """submit(dict) / submit([dicts]) / submit(RESIDENT) all dispatch
+    correctly through one path, with the planner's counters visible."""
+    subproc("""
+import numpy as np
+from repro.api import AUTO, OffloadPolicy, Residency, Session
+from repro.core import jobs
+
+job = jobs.make_matmul(32, 16, 16)
+insts, exps = jobs.make_instances(job, 6, seed0=0)
+sess = Session(n_units=4)
+
+# single
+h = sess.submit(job, insts[0], n=8)
+assert np.allclose(h.wait(), exps[0])
+
+# multi under a pinned policy: 6 jobs at fuse=4 -> one fused launch + 2
+# pipelined singles, results in submit order
+hm = sess.submit(job, insts, n=8, policy=OffloadPolicy(fuse=4))
+res = hm.wait()
+assert len(res) == 6
+for r, e in zip(res, exps):
+    assert np.allclose(r, e)
+assert hm.decision.fuse == 4
+assert hm.jobs == 6
+
+# resident redispatch (typed), primed through session.stage
+sess.stage(job, insts[3], n=8)
+hr = sess.submit(job, Residency.RESIDENT, n=8,
+                 policy=OffloadPolicy(window=1))
+assert np.allclose(hr.wait(), exps[3])
+
+# resident fused redispatch of a staged (B, ...) batch
+sess.stage(job, insts[:4], n=8)
+hf = sess.submit(job, Residency.RESIDENT, n=8,
+                 policy=OffloadPolicy(fuse=4, window=1))
+rf = hf.wait()
+assert len(rf) == 4
+for r, e in zip(rf, exps[:4]):
+    assert np.allclose(r, e)
+
+# explain: predicted phases next to measured counters
+text = str(h.explain())
+assert "phase E" in text and "measured" in text and "device_puts" in text
+assert sess.stats.dispatches >= 6
+print("OK")
+""")
+
+
+def test_session_pipelines_successive_singles(subproc):
+    """Successive single submits of one (job, selection) pair share a
+    pipelined stream: handles stay in flight up to the window, results
+    stay correct in any wait order, and no plan/compile is rebuilt."""
+    subproc("""
+import numpy as np
+from repro.api import OffloadPolicy, Session
+from repro.core import jobs
+
+job = jobs.make_axpy(2048)
+insts, exps = jobs.make_instances(job, 10, seed0=5)
+sess = Session(n_units=3)
+sess.submit(job, insts[0], n=4).wait()            # warm plan + compile
+rt = sess.runtime()
+plans_before, compiled_before = len(rt._plans), len(rt._compiled)
+
+handles = [sess.submit(job, insts[i], n=4) for i in range(10)]
+stream = next(iter(sess._streams.values()))
+assert 1 <= stream.inflight <= 3                  # window = n_units
+assert stream.stats["window_stalls"] >= 10 - 3    # the window filled
+for h, e in zip(reversed(handles), reversed(exps)):   # any order
+    assert np.allclose(h.wait(), e)
+assert len(rt._plans) == plans_before
+assert len(rt._compiled) == compiled_before
+sess.drain()
+
+# a pinned window=1 policy is the sequential mode
+hseq = sess.submit(job, insts[0], n=4, policy=OffloadPolicy(window=1))
+assert np.allclose(hseq.wait(), exps[0])
+print("OK")
+""")
+
+
+def test_session_auto_tree_staging_and_baseline(subproc):
+    """AUTO picks tree staging for the broadcast class (one host upload
+    per replicated operand, byte-counted) and a baseline policy flows
+    through the same submit path with the O(n) chain structure."""
+    subproc("""
+import numpy as np
+from repro.api import AUTO, InfoDist, OffloadPolicy, Planner, Residency, Session, Staging
+from repro.core import jobs
+from repro.core.offload import count_collectives
+
+job = jobs.make_covariance(64, 128)     # 64 KiB replicated data matrix
+# model-faithful planner: follow the cycle model's tree pick at any size
+sess = Session(planner=Planner(tree_min_bytes=0))
+operands, expected = job.make_instance(0)
+h = sess.submit(job, operands, n=8)
+assert h.decision.staging is Staging.TREE
+assert np.allclose(h.wait(), expected)
+st = h.explain().stats
+# tree staging: the replicated operand (and the replicated job args)
+# crossed the host link exactly once each, fanning out device-to-device
+args_bytes = 8 * 8
+assert st.h2d_bytes == operands["data"].nbytes + args_bytes
+assert st.d2d_bytes == 7 * (operands["data"].nbytes + args_bytes)
+assert st.tree_stages == 2
+
+est = sess.estimate(job, n=8)
+assert est.staging_cycles["tree"] < est.staging_cycles["host_fanout"]
+
+# baseline implementation through the same path
+base = OffloadPolicy(info_dist=InfoDist.P2P_CHAIN,
+                     completion="central_counter")
+hb = sess.submit(job, operands, n=8, policy=base)
+assert np.allclose(hb.wait(), expected)
+colls = count_collectives(sess.runtime(base).lowered_text(job, 8))
+assert colls["collective-permute"] == 2 * (8 - 1)
+print("OK")
+""")
+
+
+def test_session_window_cap_and_adopted_runtime(subproc):
+    """Regressions: a pinned window above the completion-unit count is
+    clamped (not a CompletionUnit crash), and a Session adopting a
+    runtime with a non-default staging config keeps its warm plans."""
+    subproc("""
+import numpy as np
+from repro.api import (
+    OffloadConfig, OffloadPolicy, OffloadRuntime, Residency, Session, Staging,
+)
+from repro.core import jobs
+
+job = jobs.make_matmul(32, 16, 16)
+insts, exps = jobs.make_instances(job, 12, seed0=0)
+
+# 6 fused launches through a window pinned far above n_units=4: the
+# submit path must clamp to the completion-unit copies
+sess = Session(n_units=4)
+h = sess.submit(job, insts, n=8, policy=OffloadPolicy(fuse=2, window=16))
+for r, e in zip(h.wait(), exps):
+    assert np.allclose(r, e)
+
+# a runtime whose config default is TREE staging still backs the
+# session (warm plan + residency survive adoption)
+rt = OffloadRuntime(config=OffloadConfig(staging=Staging.TREE))
+rt.offload(job, insts[0], n=8).wait()
+s2 = Session(runtime=rt)
+got = s2.submit(job, Residency.RESIDENT, n=8,
+                policy=OffloadPolicy(window=1)).wait()
+assert np.allclose(got, exps[0])
+assert s2.runtime() is rt
+print("OK")
+""")
+
+
+def test_legacy_surface_deprecations(subproc):
+    """Satellite: every legacy spelling warns exactly once per call and
+    keeps working; the session path stays silent."""
+    subproc("""
+import warnings
+import numpy as np
+from repro.api import Residency, Session, Staging
+from repro.core import jobs
+from repro.core.offload import OffloadRuntime
+from repro.core.stream import OffloadStream
+
+job = jobs.make_axpy(512)
+operands, expected = job.make_instance(0)
+rt = OffloadRuntime()
+
+def deprecations(records):
+    return [w for w in records if issubclass(w.category, DeprecationWarning)]
+
+# offload(job, "resident") warns; Residency.RESIDENT does not
+rt.offload(job, operands, n=2).wait()
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    got = rt.offload(job, "resident", n=2).wait()
+assert np.allclose(got, expected) and len(deprecations(w)) == 1
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    rt.offload(job, Residency.RESIDENT, n=2).wait()
+assert not deprecations(w)
+
+# string via= warns; Staging enum does not
+plan = rt.plan(job, operands, n=2)
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    plan.stage(operands, via="tree")
+assert len(deprecations(w)) == 1
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    plan.stage(operands, via=Staging.TREE)
+assert not deprecations(w)
+
+# direct OffloadStream construction warns (string staging doubles up)
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    stream = OffloadStream(rt, job, n=2, staging="tree")
+assert len(deprecations(w)) == 2
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    stream.submit("resident").wait()
+assert len(deprecations(w)) == 1
+
+# direct offload_fused warns
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    insts, _ = jobs.make_instances(job, 2, seed0=0)
+    rt.offload_fused(job, insts, n=2).wait()
+assert len(deprecations(w)) == 1
+
+# unknown modes still fail loudly under either spelling
+try:
+    rt.offload(job, "residnet", n=2)
+    raise AssertionError("expected ValueError")
+except ValueError:
+    pass
+try:
+    rt.offload(job, Residency.FRESH, n=2)
+    raise AssertionError("expected ValueError")
+except ValueError:
+    pass
+
+# the session path is warning-free
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    sess = Session()
+    sess.submit(job, operands, n=2).wait()
+    sess.stage(job, operands, n=2)
+    sess.submit(job, Residency.RESIDENT, n=2).wait()
+    sess.drain()
+assert not deprecations(w), [str(x.message) for x in deprecations(w)]
+print("OK")
+""")
