@@ -1,12 +1,14 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig07,fig12,...] \\
+    PYTHONPATH=src python -m benchmarks.run [--list] [--only fig07,...] \\
         [--json BENCH_offload.json] [--check BENCH_offload.json]
 
 Prints ``name,us_per_call,derived`` CSV.  Simulator-backed figures report
 modeled cycles (1 cycle = 1 ns at the paper's 1 GHz testbench); `derived`
 carries each figure's headline statistic next to the paper's published
-value.
+value.  ``--list`` prints every suite with its one-line description and
+which CI gate covers it; an unknown ``--only`` name is an error (it used
+to silently run nothing).
 
 ``--json PATH`` additionally writes the run as structured JSON — one entry
 per suite with its rows, the derived headline, and (where the suite exposes
@@ -37,6 +39,31 @@ import argparse
 import json
 import sys
 import time
+
+#: suite registry: name -> one-line description.  Static — ``--list`` /
+#: ``--only`` validation must not import the (jax-heavy) benchmark
+#: modules; main() asserts the registry matches the runtime suite dict.
+SUITES = {
+    "fig07": "offload overhead vs n, baseline vs multicast (paper fig. 7)",
+    "fig08": "speedup restoration of the extensions (paper fig. 8)",
+    "fig09": "per-phase offload breakdown at n=32 (paper fig. 9)",
+    "fig10": "multicast wakeup scaling (paper fig. 10)",
+    "fig11": "phase min/avg/max bands across clusters (paper fig. 11)",
+    "fig12": "analytical-model error vs simulator (paper fig. 12)",
+    "decision": "the model-driven offload decision (§1/§5.6)",
+    "kernels": "paper kernels vs pure-JAX reference wallclock",
+    "offload": "dispatch fast-path wallclock (resident vs re-staged)",
+    "stream": "pipelined/fused/AUTO session dispatch throughput",
+    "serve_stream": "serve decode modes + continuous batching tok/s",
+    "staging": "hierarchical staging cost model vs discrete event",
+    "staging_wall": "host_fanout vs tree staging wallclock sweep",
+    "session": "session estimate contract + AUTO decision signature",
+    "scheduler": "fabric scheduler: utilization, placement regret, "
+                 "makespan model",
+}
+
+#: suites the CI bench-smoke gate runs (`make bench-smoke` / ci.yml)
+CI_SUITES = ("fig07", "fig12", "staging", "session", "scheduler")
 
 #: row-name fragments excluded from --check (compile-dominated, unbounded noise)
 CHECK_SKIP = ("/cold", "/error", "unix_time")
@@ -128,10 +155,26 @@ def check_against(report: dict, recorded: dict, tolerance: float) -> int:
     return failures
 
 
+def list_suites() -> None:
+    """``--list``: every suite, its description, and its CI coverage."""
+    w = max(len(k) for k in SUITES)
+    print(f"{'suite'.ljust(w)}  {'ci gate'.ljust(12)}  description")
+    for name, desc in SUITES.items():
+        gate = "bench-smoke" if name in CI_SUITES else "-"
+        print(f"{name.ljust(w)}  {gate.ljust(12)}  {desc}")
+    print(f"\n{len(SUITES)} suites; 'bench-smoke' = gated by "
+          "`make bench-smoke` / the ci.yml regression check against "
+          "BENCH_offload.json")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="print every suite with its description and CI "
+                         "gate, then exit")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset, e.g. fig07,fig12")
+                    help="comma-separated subset, e.g. fig07,fig12 "
+                         "(unknown names are an error)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as structured JSON to PATH")
     ap.add_argument("--check", default=None, metavar="PATH",
@@ -142,11 +185,23 @@ def main() -> None:
                          "(default 0.30)")
     args = ap.parse_args()
 
+    if args.list:
+        list_suites()
+        return
+    keep = None
+    if args.only:
+        keep = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = sorted(set(keep) - set(SUITES))
+        if unknown:
+            ap.error(f"unknown suite(s) {', '.join(unknown)}; valid: "
+                     f"{', '.join(SUITES)} (see --list)")
+
     from benchmarks.kernel_bench import kernel_table
     from benchmarks.offload_wallclock import (
         offload_wallclock, serve_throughput, staging_wall, stream_wallclock,
     )
     from benchmarks.paper_figs import ALL_FIGS
+    from benchmarks.scheduler_bench import scheduler_suite
     from benchmarks.session_bench import session_suite
     from benchmarks.staging import staging_suite
 
@@ -158,8 +213,10 @@ def main() -> None:
     suites["staging"] = staging_suite
     suites["staging_wall"] = staging_wall
     suites["session"] = session_suite
-    if args.only:
-        keep = set(args.only.split(","))
+    suites["scheduler"] = scheduler_suite
+    missing = sorted(set(suites) ^ set(SUITES))
+    assert not missing, f"suite registry out of sync: {missing}"
+    if keep is not None:
         suites = {k: v for k, v in suites.items() if k in keep}
 
     report = {"schema": 1, "unix_time": time.time(), "suites": {}}

@@ -4,7 +4,10 @@ The stable, snapshot-tested public surface of the framework (see
 ``tests/test_api_surface.py``): typed policies, the unified
 :class:`Session` submit path, the model-driven ``AUTO`` planner, the
 prediction contract (:func:`estimate` / :func:`predict_staging`,
-paper §6, error < 15 %), and the serving engine.
+paper §6, error < 15 %), the serving engine, and the multi-tenant
+fabric scheduler (:class:`FabricScheduler` / :class:`ClusterLease` /
+:class:`ServeTenant` — sessions hold leases on cluster windows instead
+of the whole mesh; see the README's "Fabric scheduler" section).
 
 Quickstart::
 
@@ -26,6 +29,14 @@ working behind :class:`DeprecationWarning` shims; the README's "Session
 API" section has the migration table.
 """
 
+from repro.core.fabric import (
+    ClusterLease,
+    FabricScheduler,
+    LeaseError,
+    LeaseUnavailable,
+    SchedulerPolicy,
+    Tenant,
+)
 from repro.core.jobs import PAPER_JOBS, PaperJob, make_instances
 from repro.core.multicast import MulticastRequest
 from repro.core.offload import (
@@ -41,6 +52,7 @@ from repro.core.policy import (
     OffloadPolicy,
     Residency,
     Staging,
+    TenantKind,
 )
 from repro.core.session import (
     Estimate,
@@ -52,15 +64,19 @@ from repro.core.session import (
     estimate,
     predict_staging,
 )
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import ServeConfig, ServeEngine, ServeTenant
 
 __all__ = [
     "AUTO",
+    "ClusterLease",
     "Completion",
     "Estimate",
     "Explain",
+    "FabricScheduler",
     "InfoDist",
     "JobHandle",
+    "LeaseError",
+    "LeaseUnavailable",
     "MulticastRequest",
     "OffloadConfig",
     "OffloadPolicy",
@@ -71,11 +87,15 @@ __all__ = [
     "PlanStats",
     "Planner",
     "Residency",
+    "SchedulerPolicy",
     "ServeConfig",
     "ServeEngine",
+    "ServeTenant",
     "Session",
     "SessionHandle",
     "Staging",
+    "Tenant",
+    "TenantKind",
     "estimate",
     "make_instances",
     "predict_staging",

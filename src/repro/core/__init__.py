@@ -10,6 +10,14 @@ from repro.core.broadcast import (
     tree_from_request,
 )
 from repro.core.completion import CompletionUnit
+from repro.core.fabric import (
+    ClusterLease,
+    FabricScheduler,
+    LeaseError,
+    LeaseUnavailable,
+    SchedulerPolicy,
+    Tenant,
+)
 from repro.core.jobs import PAPER_JOBS, PaperJob, make_instances, stack_instances
 from repro.core.model import (
     axpy_closed_form,
@@ -45,6 +53,7 @@ from repro.core.policy import (
     OffloadPolicy,
     Residency,
     Staging,
+    TenantKind,
 )
 from repro.core.session import (
     Estimate,
@@ -60,12 +69,16 @@ from repro.core.stream import OffloadStream
 from repro.core.params import DEFAULT_PARAMS, OccamyParams
 from repro.core.phases import Phase, PhaseStats
 from repro.core.simulator import (
+    FabricSimResult,
     JobSpec,
     SimResult,
     StagingCostModel,
+    TenantWorkload,
+    fabric_makespan_model,
     model_error,
     offload_overhead,
     simulate,
+    simulate_fabric,
     simulate_staging,
     speedups,
     staging_model,
@@ -73,16 +86,22 @@ from repro.core.simulator import (
 )
 
 __all__ = [
-    "AUTO", "AddressMap", "BroadcastTree", "Completion", "CompletionUnit",
+    "AUTO", "AddressMap", "BroadcastTree", "ClusterLease", "Completion",
+    "CompletionUnit",
     "DEFAULT_PARAMS",
-    "DispatchPlan", "Estimate", "Explain",
+    "DispatchPlan", "Estimate", "Explain", "FabricScheduler",
+    "FabricSimResult",
     "FusedHandle", "InfoDist", "JobHandle", "JobSpec",
+    "LeaseError", "LeaseUnavailable",
     "MulticastRequest", "OccamyParams", "OffloadConfig", "OffloadPolicy",
     "OffloadRuntime",
     "OffloadStream", "PlanDecision", "PlanStats", "Planner",
     "PAPER_JOBS", "PaperJob", "Phase", "PhaseStats", "Residency",
+    "SchedulerPolicy",
     "Session", "SessionHandle", "SimResult",
-    "Staging", "StagingCostModel", "TreeStager",
+    "Staging", "StagingCostModel", "Tenant", "TenantKind",
+    "TenantWorkload", "TreeStager",
+    "fabric_makespan_model", "simulate_fabric",
     "atax_closed_form_paper", "axpy_closed_form", "count_collectives",
     "build_tree", "decode_cluster_selection", "decode_match",
     "depth_bound", "encode_cluster_selection",

@@ -101,6 +101,25 @@ class BroadcastTree:
         """Every cluster the broadcast covers (root + all edge dsts)."""
         return tuple(sorted({self.root} | {d for _, d in self.edges}))
 
+    def cross_quadrant_edges(
+        self, clusters_per_quadrant: int = mc.CLUSTERS_PER_QUADRANT
+    ) -> int:
+        """How many tree edges cross a quadrant boundary.
+
+        Cross-quadrant hops pay the long narrow-network latency (§5.5 C),
+        so this is the placement-sensitive part of the tree staging cost.
+        The fabric scheduler's placement objective is the full
+        discrete-event staging cost (``simulate_staging``, which resolves
+        these edges among everything else); this count is the cheap,
+        testable proxy for it — a window inside one quadrant has zero, a
+        straddling window at least one — used to assert placement
+        quality.
+        """
+        return sum(
+            1 for s, d in self.edges
+            if s // clusters_per_quadrant != d // clusters_per_quadrant
+        )
+
 
 def depth_bound(cluster_ids: Iterable[int],
                 clusters_per_quadrant: int = mc.CLUSTERS_PER_QUADRANT) -> int:

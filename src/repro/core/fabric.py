@@ -1,0 +1,537 @@
+"""Fabric scheduler — multi-tenant cluster leases over the offload mesh.
+
+The paper's measurements assume one host job owns the whole 200+-core
+fabric, but its own scaling data argues against that as an operating
+point: offload overheads grow with n while fine-grained jobs stop
+profiting from extra clusters early (fig. 7 / §5.3), so a small job on
+the full mesh wastes most of it.  ESP-style SoC research treats
+accelerator tiles as *schedulable resources*, and the companion offload
+work (arXiv:2404.01908) chooses offload modes from a cost model — this
+module applies both ideas to the fabric itself:
+
+* :class:`ClusterLease` — ownership of a contiguous cluster window.
+  Sessions bind a lease instead of the global mesh; disjoint leases run
+  concurrently and bit-identically to sequential full-mesh runs (the
+  sub-mesh, shardings, and compiled programs depend only on the lease's
+  device window — asserted in ``tests/test_fabric.py``).  Aligned
+  power-of-two windows encode as ONE multicast request
+  (:func:`repro.core.multicast.encode_contiguous_window`), so the
+  paper's O(1) wakeup and the PR-3 fan-out tree stay legal per lease.
+* :class:`FabricScheduler` — admits, places, queues, and resizes leases.
+  Placement and slice sizing are *model-driven*: candidate windows are
+  scored by the §6 cost model (dispatch + staging + compute via
+  ``repro.core.session.estimate`` and the quadrant-aware
+  ``simulate_staging``), so a lease lands where the predicted makespan
+  is smallest — e.g. inside one quadrant rather than straddling two.
+* :class:`Tenant` / :class:`SchedulerPolicy` — the typed vocabulary:
+  resident ``SERVE`` tenants hold a floor lease and burst between decode
+  batches (``resize``), bursty ``OFFLOAD`` tenants lease for a job
+  stream and release.
+
+The multi-tenant *contention* these placements imply (every tenant's
+dispatch and resume serializes on the one host core) is modeled by
+:func:`repro.core.simulator.simulate_fabric`; the ``scheduler`` bench
+suite validates utilization, placement regret vs. exhaustive search,
+and the closed-form makespan prediction against it.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core import broadcast as bc
+from repro.core import multicast as mc
+from repro.core import simulator
+from repro.core.params import DEFAULT_PARAMS, OccamyParams
+from repro.core.policy import TenantKind
+
+#: replicated-operand footprint assumed when a lease request names no job —
+#: placement still prefers quadrant-local windows over straddling ones
+NOMINAL_STAGE_BYTES = 64 << 10
+
+
+class LeaseError(RuntimeError):
+    """A lease operation on released/stale/foreign state."""
+
+
+class LeaseUnavailable(LeaseError):
+    """No placement satisfies the request right now (queueable)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Tenant:
+    """A fabric tenant, to the scheduler's admission model."""
+
+    name: str
+    kind: TenantKind = TenantKind.OFFLOAD
+    weight: float = 1.0          # informational fair-share weight
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            raise ValueError("tenant name must be non-empty")
+        object.__setattr__(self, "kind", TenantKind(self.kind))
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerPolicy:
+    """How the scheduler places and sizes leases.
+
+    * ``placement`` — ``"model"`` scores every feasible contiguous window
+      by the predicted staging cost of the request's operand footprint
+      (quadrant-aware, ties to the lowest start); ``"first_fit"`` takes
+      the lowest free window unscored.
+    * ``align`` — prefer windows whose start is aligned to the largest
+      power of two in the lease size, so the window encodes as a single
+      multicast request and buddy-style packing limits fragmentation.
+      Falls back to unaligned windows when no aligned one is free.
+    * ``share_slack`` — when the model sizes a slice (``n=None`` with a
+      job), any smaller candidate within ``1 + share_slack`` of the best
+      predicted makespan wins, leaving head-room for co-tenants.
+    """
+
+    placement: str = "model"
+    align: bool = True
+    share_slack: float = 0.05
+
+    def __post_init__(self) -> None:
+        if self.placement not in ("model", "first_fit"):
+            raise ValueError(
+                f"placement {self.placement!r} not in ('model', 'first_fit')")
+        if self.share_slack < 0:
+            raise ValueError(
+                f"share_slack must be >= 0, got {self.share_slack}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterLease:
+    """Ownership of a contiguous cluster window of the fabric.
+
+    The window is expressed in *global* cluster ids — they key dispatch
+    plans, drive quadrant-aware staging trees, and make concurrent
+    sessions on disjoint leases bit-equal to sequential full-mesh runs
+    on the same selections.
+    """
+
+    lease_id: int
+    tenant: str
+    clusters: Tuple[int, ...]
+    scheduler: Optional["FabricScheduler"] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    def __post_init__(self) -> None:
+        ids = tuple(int(c) for c in self.clusters)
+        if not ids:
+            raise ValueError("a lease must cover at least one cluster")
+        if ids != tuple(sorted(set(ids))) or ids[0] < 0:
+            raise ValueError(
+                f"lease clusters must be sorted, unique, non-negative "
+                f"ids; got {ids}")
+        object.__setattr__(self, "clusters", ids)
+
+    @property
+    def n(self) -> int:
+        return len(self.clusters)
+
+    @property
+    def start(self) -> int:
+        return self.clusters[0]
+
+    @property
+    def active(self) -> bool:
+        """True while this exact lease is the scheduler's current grant."""
+        if self.scheduler is None:
+            return True          # a synthesized whole-mesh descriptor
+        return self.scheduler._current(self) is self
+
+    def requests(self) -> List[mc.MulticastRequest]:
+        """The multicast cover of this lease's cluster set — ONE request
+        when the window is a size-aligned power-of-two block (the
+        legality the scheduler's aligned placement preserves).  Encodes
+        the *actual* set, so a synthesized lease over a non-contiguous
+        runtime window still covers exactly its clusters (with more
+        requests)."""
+        num = (self.scheduler.num_clusters if self.scheduler is not None
+               else max(mc.NUM_CLUSTERS, self.clusters[-1] + 1))
+        return mc.encode_cluster_selection_multi(self.clusters, num)
+
+    def tree(self, clusters_per_quadrant: int = mc.CLUSTERS_PER_QUADRANT
+             ) -> bc.BroadcastTree:
+        """The lease's quadrant-aware fan-out tree (PR-3 staging path)."""
+        return bc.build_tree(self.clusters, clusters_per_quadrant)
+
+    @property
+    def devices(self) -> List[Any]:
+        if self.scheduler is None:
+            raise LeaseError("synthesized lease carries no devices")
+        return self.scheduler.devices_for(self.clusters)
+
+    def release(self) -> None:
+        if self.scheduler is not None:
+            self.scheduler.release(self)
+
+
+class PendingLease:
+    """A queued lease request; ``lease`` is set when the grant lands."""
+
+    def __init__(self, tenant: str, n: Optional[int],
+                 clusters: Optional[Tuple[int, ...]],
+                 job: Any, batch: int):
+        self.tenant = tenant
+        self.n = n
+        self.clusters = clusters
+        self.job = job
+        self.batch = batch
+        self.lease: Optional[ClusterLease] = None
+
+    @property
+    def ready(self) -> bool:
+        return self.lease is not None
+
+
+class FabricScheduler:
+    """Admission, placement, and resizing of cluster leases.
+
+    ``devices`` (one per cluster) makes leases executable — sessions and
+    serve tenants bind them; with ``num_clusters`` alone the scheduler
+    runs model-only (the bench suites' mode).  Placement candidates are
+    contiguous free windows; the ``"model"`` policy scores them with the
+    quadrant-aware staging model, slice sizing (``n=None`` + ``job``)
+    minimizes the predicted makespan of the submitted batch.
+    """
+
+    def __init__(self, devices: Optional[Sequence[Any]] = None, *,
+                 num_clusters: Optional[int] = None,
+                 params: OccamyParams = DEFAULT_PARAMS,
+                 policy: SchedulerPolicy = SchedulerPolicy()):
+        if devices is None and num_clusters is None:
+            import jax
+            devices = jax.devices()
+        self._devices = list(devices) if devices is not None else None
+        if num_clusters is None:
+            num_clusters = len(self._devices)
+        elif self._devices is not None and num_clusters != len(self._devices):
+            raise ValueError(
+                f"num_clusters={num_clusters} != {len(self._devices)} devices")
+        if num_clusters < 1:
+            raise ValueError(f"num_clusters must be >= 1, got {num_clusters}")
+        self.num_clusters = int(num_clusters)
+        self.params = params
+        self.policy = policy
+        self._owner: Dict[int, int] = {}          # cluster -> lease_id
+        self._leases: Dict[int, ClusterLease] = {}
+        self._tenants: Dict[str, Tenant] = {}
+        self._pending: Deque[PendingLease] = collections.deque()
+        self._next_id = itertools.count(1)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def leases(self) -> Tuple[ClusterLease, ...]:
+        return tuple(self._leases[i] for i in sorted(self._leases))
+
+    @property
+    def pending(self) -> Tuple[PendingLease, ...]:
+        return tuple(self._pending)
+
+    def free_clusters(self) -> Tuple[int, ...]:
+        return tuple(c for c in range(self.num_clusters)
+                     if c not in self._owner)
+
+    def tenant(self, name: str) -> Optional[Tenant]:
+        return self._tenants.get(name)
+
+    def devices_for(self, clusters: Sequence[int]) -> List[Any]:
+        if self._devices is None:
+            raise LeaseError(
+                "model-only scheduler (constructed with num_clusters, no "
+                "devices) cannot back executable leases")
+        return [self._devices[c] for c in clusters]
+
+    def _current(self, lease: ClusterLease) -> Optional[ClusterLease]:
+        return self._leases.get(lease.lease_id)
+
+    # -- placement ----------------------------------------------------------
+
+    def _free_runs(self) -> List[Tuple[int, int]]:
+        """Contiguous free runs as (start, length), ascending."""
+        runs: List[Tuple[int, int]] = []
+        start = None
+        for c in range(self.num_clusters + 1):
+            free = c < self.num_clusters and c not in self._owner
+            if free and start is None:
+                start = c
+            elif not free and start is not None:
+                runs.append((start, c - start))
+                start = None
+        return runs
+
+    def _windows(self, n: int) -> List[Tuple[int, ...]]:
+        """Feasible contiguous windows of size ``n``, aligned-first."""
+        all_starts = [s + k for s, length in self._free_runs()
+                      for k in range(length - n + 1)]
+        if not all_starts:
+            return []
+        starts = all_starts
+        if self.policy.align:
+            align = 1 << (n.bit_length() - 1)     # largest pow2 <= n
+            aligned = [s for s in all_starts if s % align == 0]
+            starts = aligned or all_starts
+        return [tuple(range(s, s + n)) for s in starts]
+
+    def placement_cost(self, clusters: Sequence[int],
+                       stage_bytes: int = NOMINAL_STAGE_BYTES) -> float:
+        """Predicted staging cycles of one replicated operand on this
+        window — the placement-sensitive model term (quadrant-aware tree
+        legs; windows inside one quadrant beat straddling ones)."""
+        return simulator.simulate_staging(
+            max(1, stage_bytes), list(clusters), "tree", self.params)
+
+    def _stage_bytes(self, job: Any) -> int:
+        if job is None:
+            return NOMINAL_STAGE_BYTES
+        from repro.core.session import Planner
+        return max(1, Planner(self.params).replicated_bytes(job))
+
+    def predict_makespan(self, job: Any, clusters: Sequence[int],
+                         batch: int = 1) -> float:
+        """§6 model of a batch of ``job`` on this window: first launch
+        end-to-end plus the amortized per-job pipeline period for the
+        rest (dispatch + staging + compute, placement-aware)."""
+        from repro.core.session import estimate
+        est = estimate(job, clusters=list(clusters), batch=batch,
+                       params=self.params)
+        stage = est.staging_cycles.get("direct", 0.0)
+        return est.job_cycles + stage + max(0, batch - 1) * est.per_job_cycles
+
+    def _place(self, n: int, job: Any = None, batch: int = 1
+               ) -> Optional[Tuple[int, ...]]:
+        windows = self._windows(n)
+        if not windows:
+            return None
+        if self.policy.placement == "first_fit":
+            return min(windows, key=lambda w: w[0])
+        nbytes = self._stage_bytes(job)
+        return min(windows,
+                   key=lambda w: (self.placement_cost(w, nbytes), w[0]))
+
+    def _pick_slice(self, job: Any, batch: int) -> Optional[Tuple[int, ...]]:
+        """Model-driven slice sizing: among power-of-two sizes that fit
+        the free fabric, place each candidate and keep the smallest one
+        whose predicted makespan is within ``1 + share_slack`` of the
+        best — small enough to share, big enough to be near-optimal."""
+        largest = max((length for _, length in self._free_runs()),
+                      default=0)
+        if largest < 1:
+            return None
+        sizes = [1 << k for k in range(largest.bit_length())
+                 if (1 << k) <= largest]
+        scored: List[Tuple[float, int, Tuple[int, ...]]] = []
+        for n in sizes:
+            window = self._place(n, job=job, batch=batch)
+            if window is not None:
+                scored.append(
+                    (self.predict_makespan(job, window, batch), n, window))
+        if not scored:
+            return None
+        best = min(s[0] for s in scored)
+        eligible = [s for s in scored
+                    if s[0] <= best * (1.0 + self.policy.share_slack)]
+        return min(eligible, key=lambda s: (s[1], s[0]))[2]
+
+    # -- the lease lifecycle ------------------------------------------------
+
+    def request(self, tenant: Union[str, Tenant],
+                n: Optional[int] = None, *,
+                clusters: Optional[Sequence[int]] = None,
+                job: Any = None,
+                batch: int = 1,
+                queue: bool = False
+                ) -> Union[ClusterLease, PendingLease]:
+        """Admit a lease request and place it.
+
+        Exactly one sizing input: ``n`` (place a window of that size),
+        ``clusters`` (an explicit global window — rejected when it
+        overlaps a live lease), or ``job`` alone (the model picks the
+        slice size for ``batch`` instances).  When no placement fits,
+        raises :class:`LeaseUnavailable` — or, with ``queue=True``,
+        returns a :class:`PendingLease` granted FIFO as capacity frees.
+        """
+        tenant = (tenant if isinstance(tenant, Tenant)
+                  else self._tenants.get(tenant, Tenant(tenant)))
+        self._tenants[tenant.name] = tenant
+        if clusters is not None and n is not None:
+            raise ValueError("give n or clusters, not both")
+        if clusters is not None:
+            window = tuple(sorted(int(c) for c in clusters))
+            if not window:
+                raise ValueError("empty cluster selection")
+            if window != tuple(range(window[0], window[0] + len(window))):
+                raise ValueError(
+                    f"lease windows are contiguous; {window} is not")
+            if window[-1] >= self.num_clusters or window[0] < 0:
+                raise ValueError(
+                    f"clusters {window} outside the "
+                    f"{self.num_clusters}-cluster fabric")
+            taken = [c for c in window if c in self._owner]
+            if taken:
+                holders = sorted({self._leases[self._owner[c]].tenant
+                                  for c in taken})
+                if queue:
+                    return self._enqueue(tenant.name, None, window, job,
+                                         batch)
+                raise LeaseUnavailable(
+                    f"clusters {taken} already leased (by "
+                    f"{', '.join(holders)})")
+            return self._grant(tenant.name, window)
+        if n is not None:
+            if n < 1:
+                raise ValueError(f"lease size must be >= 1, got {n}")
+            if n > self.num_clusters:
+                raise ValueError(
+                    f"lease of {n} clusters exceeds the "
+                    f"{self.num_clusters}-cluster fabric")
+            window = self._place(n, job=job, batch=batch)
+        elif job is not None:
+            window = self._pick_slice(job, batch)
+        else:
+            raise ValueError("give one of n / clusters / job")
+        if window is None:
+            if queue:
+                return self._enqueue(tenant.name, n, None, job, batch)
+            raise LeaseUnavailable(
+                f"no contiguous window of "
+                f"{n if n is not None else 'model-sized'} free clusters "
+                f"(free: {self.free_clusters()})")
+        return self._grant(tenant.name, window)
+
+    def _enqueue(self, tenant: str, n: Optional[int],
+                 clusters: Optional[Tuple[int, ...]], job: Any,
+                 batch: int) -> PendingLease:
+        pend = PendingLease(tenant, n, clusters, job, batch)
+        self._pending.append(pend)
+        return pend
+
+    def _grant(self, tenant: str, window: Tuple[int, ...]) -> ClusterLease:
+        lease = ClusterLease(next(self._next_id), tenant, window,
+                             scheduler=self)
+        for c in window:
+            self._owner[c] = lease.lease_id
+        self._leases[lease.lease_id] = lease
+        return lease
+
+    def release(self, lease: ClusterLease) -> None:
+        """Return the lease's clusters and grant queued requests FIFO."""
+        current = self._current(lease)
+        if current is None:
+            raise LeaseError(f"lease {lease.lease_id} is not active")
+        if current is not lease and current != lease:
+            raise LeaseError(
+                f"stale lease object for id {lease.lease_id} (it was "
+                "resized; release the current one)")
+        for c in current.clusters:
+            self._owner.pop(c, None)
+        del self._leases[lease.lease_id]
+        self._admit_pending()
+
+    def _admit_pending(self) -> None:
+        """FIFO grant of queued requests, backfilling past blocked heads."""
+        for pend in list(self._pending):
+            if pend.ready:
+                self._pending.remove(pend)
+                continue
+            if pend.clusters is not None:
+                if any(c in self._owner for c in pend.clusters):
+                    continue
+                window: Optional[Tuple[int, ...]] = pend.clusters
+            elif pend.n is not None:
+                window = self._place(pend.n, job=pend.job, batch=pend.batch)
+            else:
+                window = self._pick_slice(pend.job, pend.batch)
+            if window is None:
+                continue
+            pend.lease = self._grant(pend.tenant, window)
+            self._pending.remove(pend)
+
+    def resize(self, lease: ClusterLease, n: int) -> ClusterLease:
+        """Elastic grow/shrink — the serve tenant's burst mechanism.
+
+        Shrinking keeps the window's start (trailing clusters return to
+        the pool and queued requests are granted).  Growing extends the
+        window in place when adjacent clusters are free (right first,
+        then left), relocating to a fresh window only when it cannot —
+        callers keying state by ``lease.clusters`` (e.g. a serve tenant's
+        per-mesh engines) keep their warm state across a burst cycle.
+        """
+        current = self._current(lease)
+        if current is None or (current is not lease and current != lease):
+            raise LeaseError(
+                f"lease {lease.lease_id} is not the scheduler's current "
+                "grant (released or resized)")
+        if n < 1:
+            raise ValueError(f"lease size must be >= 1, got {n}")
+        if n > self.num_clusters:
+            raise ValueError(
+                f"lease of {n} clusters exceeds the "
+                f"{self.num_clusters}-cluster fabric")
+        old = current.clusters
+        if n == len(old):
+            return current
+        if n < len(old):
+            window = old[:n]
+            dropped = old[n:]
+            replaced = dataclasses.replace(current, clusters=window)
+            self._leases[current.lease_id] = replaced
+            for c in dropped:
+                self._owner.pop(c, None)
+            self._admit_pending()
+            return replaced
+        grow = n - len(old)
+        right = tuple(range(old[-1] + 1, old[-1] + 1 + grow))
+        left = tuple(range(old[0] - grow, old[0]))
+        if all(0 <= c < self.num_clusters and c not in self._owner
+               for c in right):
+            window = old + right
+        elif all(0 <= c < self.num_clusters and c not in self._owner
+                 for c in left):
+            window = left + old
+        else:
+            # cannot extend in place: relocate (a fresh window scored by
+            # the placement model, ignoring our own current holding)
+            for c in old:
+                self._owner.pop(c, None)
+            window_opt = self._place(n)
+            if window_opt is None:
+                for c in old:           # roll back
+                    self._owner[c] = current.lease_id
+                raise LeaseUnavailable(
+                    f"cannot grow lease {current.lease_id} to {n} "
+                    f"clusters (free: {self.free_clusters()})")
+            window = window_opt
+        for c in old:
+            self._owner.pop(c, None)
+        replaced = dataclasses.replace(current, clusters=tuple(window))
+        for c in replaced.clusters:
+            self._owner[c] = replaced.lease_id
+        self._leases[replaced.lease_id] = replaced
+        # a relocation freed the old window: queued requests may fit now
+        self._admit_pending()
+        return replaced
+
+    # -- session glue -------------------------------------------------------
+
+    def session(self, tenant: Union[str, Tenant],
+                n: Optional[int] = None, *,
+                clusters: Optional[Sequence[int]] = None,
+                job: Any = None,
+                batch: int = 1,
+                **session_kwargs: Any) -> Any:
+        """Lease and open a :class:`repro.core.session.Session` on it —
+        the one-call tenant entry point (``session.close()`` releases
+        the lease)."""
+        lease = self.request(tenant, n, clusters=clusters, job=job,
+                             batch=batch)
+        from repro.core.session import Session
+        return Session(lease=lease, params=self.params, **session_kwargs)

@@ -207,6 +207,31 @@ def decode_cluster_selection(
     return matching_ports(req, maps)
 
 
+def encode_contiguous_window(
+    start: int, n: int, num_clusters: int = NUM_CLUSTERS
+) -> List[MulticastRequest]:
+    """Encode the contiguous cluster window ``[start, start + n)``.
+
+    The fabric scheduler's lease placement uses this as its *legality*
+    contract: a window whose start is aligned to its (power-of-two) size is
+    a single subcube and encodes as **one** multicast request — the paper's
+    one-write wakeup stays O(1) for the whole lease.  Unaligned or
+    non-power-of-two windows decompose greedily into the minimal aligned
+    subcubes (binary buddy decomposition), so any contiguous lease is still
+    addressable, just with more requests.
+    """
+    if n < 1:
+        raise ValueError(f"window size must be >= 1, got {n}")
+    if start < 0 or start + n > num_clusters:
+        raise ValueError(
+            f"window [{start}, {start + n}) outside [0, {num_clusters})")
+    # a contiguous window is just a cluster set: the greedy subcube cover
+    # already yields the buddy decomposition (one request per maximal
+    # aligned power-of-two block, a single request for aligned windows)
+    return encode_cluster_selection_multi(range(start, start + n),
+                                          num_clusters)
+
+
 def _submasks(mask: int) -> Iterator[int]:
     """All subsets of the set bits of ``mask`` (including 0 and mask)."""
     sub = mask

@@ -539,8 +539,23 @@ class OffloadRuntime:
         devices: Optional[Sequence[jax.Device]] = None,
         config: OffloadConfig = OffloadConfig.extended(),
         n_units: int = 4,
+        cluster_ids: Optional[Sequence[int]] = None,
     ):
         self.all_devices = list(devices if devices is not None else jax.devices())
+        # the fabric window this runtime owns: global cluster ids, one per
+        # device.  A whole-mesh runtime is the identity window; a runtime
+        # backing a ClusterLease carries the lease's ids so dispatch plans
+        # are keyed by placement and staging trees stay quadrant-aware
+        # relative to the real fabric position.
+        ids = (range(len(self.all_devices)) if cluster_ids is None
+               else cluster_ids)
+        self.cluster_ids = tuple(int(c) for c in ids)
+        if len(self.cluster_ids) != len(self.all_devices):
+            raise ValueError(
+                f"{len(self.cluster_ids)} cluster ids for "
+                f"{len(self.all_devices)} devices")
+        if len(set(self.cluster_ids)) != len(self.cluster_ids):
+            raise ValueError(f"duplicate cluster ids in {self.cluster_ids}")
         self.config = config
         self.unit = CompletionUnit(n_units=n_units)
         self._job_counter = 0
@@ -572,7 +587,12 @@ class OffloadRuntime:
 
         Exactly one of ``n`` (first n clusters), ``request`` (an address-mask
         multicast request, fig. 5) or ``clusters`` (an explicit set, greedily
-        covered by subcube requests) must be given.
+        covered by subcube requests) must be given.  All three are
+        *window-relative*: they select within the runtime's fabric window
+        (``cluster_ids``), and the returned ids are the selected clusters'
+        **global** fabric ids — a lease-backed runtime keys its plans and
+        derives its staging trees from the real placement.  For a
+        whole-mesh runtime the window is the identity and nothing changes.
         """
         if sum(x is not None for x in (n, request, clusters)) != 1:
             raise ValueError("give exactly one of n / request / clusters")
@@ -588,7 +608,8 @@ class OffloadRuntime:
             if not (1 <= n <= len(self.all_devices)):
                 raise ValueError(f"n={n} outside [1, {len(self.all_devices)}]")
             ids = list(range(n))
-        return [self.all_devices[i] for i in ids], ids
+        return ([self.all_devices[i] for i in ids],
+                [self.cluster_ids[i] for i in ids])
 
     # -- planning -------------------------------------------------------------------
 

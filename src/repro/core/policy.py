@@ -66,6 +66,20 @@ class Completion(str, enum.Enum):
     CENTRAL_COUNTER = "central_counter"  # software central-counter chain
 
 
+class TenantKind(str, enum.Enum):
+    """What a fabric tenant is, to the scheduler's admission model.
+
+    A ``SERVE`` tenant is resident — it holds a floor lease indefinitely
+    and bursts above it between decode batches; an ``OFFLOAD`` tenant is
+    bursty — it leases for a bounded job stream and releases.  The
+    :class:`repro.core.fabric.FabricScheduler` favors leaving head-room
+    for the resident class when slicing the fabric.
+    """
+
+    OFFLOAD = "offload"
+    SERVE = "serve"
+
+
 _E = TypeVar("_E", bound=enum.Enum)
 
 
@@ -149,6 +163,17 @@ class OffloadPolicy:
             v = getattr(self, field)
             if v is not None and (not isinstance(v, int) or v < lo):
                 raise ValueError(f"{field} must be an int >= {lo}, got {v!r}")
+        # cross-field contradictions fail at construction, not mid-dispatch:
+        # a RESIDENT submit stages nothing, so a pinned non-DIRECT staging
+        # strategy could never run — silently ignoring it would misreport
+        # every estimate/explain derived from the policy
+        if (self.residency is Residency.RESIDENT
+                and self.staging is not None
+                and self.staging is not Staging.DIRECT):
+            raise ValueError(
+                f"residency=RESIDENT stages no operands; pinning "
+                f"staging={self.staging.value!r} is contradictory (leave "
+                "staging unset or DIRECT)")
 
     @property
     def decided(self) -> bool:

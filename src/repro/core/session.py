@@ -54,6 +54,7 @@ import numpy as np
 from repro.core import model as amodel
 from repro.core import multicast as mc
 from repro.core import simulator
+from repro.core.fabric import ClusterLease
 from repro.core.jobs import PaperJob, stack_instances
 from repro.core.offload import (
     FusedHandle, OffloadConfig, OffloadRuntime, PlanStats,
@@ -140,15 +141,49 @@ class Estimate:
     staging_cycles: Mapping[str, float]
     replicated_bytes: int
 
+    @property
+    def per_launch_phases(self) -> Dict[Phase, float]:
+        """Phase terms of ONE fused launch under the decision: the
+        dispatch-constant phases are paid once, the batch-scaling phases
+        (E operand staging, F compute, G writeback) carry all B stacked
+        instances.  Equal to ``phases`` when the launch is unfused."""
+        B = self.decision.fuse
+        return {ph: (v if ph in CONST_PHASES else v * B)
+                for ph, v in self.phases.items()}
+
+    @property
+    def per_instance_phases(self) -> Dict[Phase, float]:
+        """Phase terms attributable to one instance of a fused launch:
+        the dispatch constant amortized over B, the batch-scaling phases
+        at their single-instance size.  Equal to ``phases`` when
+        unfused."""
+        B = self.decision.fuse
+        return {ph: (v / B if ph in CONST_PHASES else v)
+                for ph, v in self.phases.items()}
+
     def table(self) -> str:
-        """Phase-by-phase breakdown, render-ready (fig. 11 shape)."""
+        """Phase-by-phase breakdown, render-ready (fig. 11 shape).
+
+        For a fused decision (B > 1) each phase reports the
+        *per-instance* and *per-launch* terms side by side — a stacked
+        batch is otherwise ambiguous about which of the two a number
+        means."""
         lines = [f"estimate {self.job} n={self.n} batch={self.batch} "
                  f"[staging={self.decision.staging.value} "
                  f"fuse={self.decision.fuse} window={self.decision.window}]"]
+        B = self.decision.fuse
+        per_inst = self.per_instance_phases
+        per_launch = self.per_launch_phases
         for ph in Phase:
             if ph in self.phases:
-                lines.append(f"  phase {ph.name}: "
-                             f"{self.phases[ph]:12.1f} cyc")
+                if B > 1:
+                    lines.append(
+                        f"  phase {ph.name}: per-instance "
+                        f"{per_inst[ph]:12.1f} cyc | per-launch (B={B}) "
+                        f"{per_launch[ph]:12.1f} cyc")
+                else:
+                    lines.append(f"  phase {ph.name}: "
+                                 f"{self.phases[ph]:12.1f} cyc")
         lines.append(f"  job total:  {self.job_cycles:12.1f} cyc "
                      f"(per-job amortized: {self.per_job_cycles:.1f})")
         if self.replicated_bytes:
@@ -463,6 +498,7 @@ class Session:
     """
 
     def __init__(self, devices: Optional[Sequence[Any]] = None, *,
+                 lease: Optional[ClusterLease] = None,
                  policy: OffloadPolicy = AUTO,
                  n_units: int = 4,
                  params: OccamyParams = DEFAULT_PARAMS,
@@ -470,6 +506,8 @@ class Session:
                  runtime: Optional[OffloadRuntime] = None):
         if runtime is not None and devices is not None:
             raise ValueError("give devices or a runtime, not both")
+        if lease is not None and (devices is not None or runtime is not None):
+            raise ValueError("give a lease or devices/runtime, not both")
         if not isinstance(policy, OffloadPolicy):
             raise TypeError(f"policy must be an OffloadPolicy, got "
                             f"{type(policy).__name__}")
@@ -478,14 +516,26 @@ class Session:
         self.params = params
         self.planner = planner or Planner(params)
         self._runtimes: Dict[OffloadConfig, OffloadRuntime] = {}
-        if runtime is not None:
+        self._closed = False
+        if lease is not None:
+            # the session binds the lease's fabric window, not the global
+            # mesh: submits select within it, plans/trees key on its
+            # global cluster ids, close() returns it to the scheduler
+            self._devices = list(lease.devices)
+            self._cluster_ids: Tuple[int, ...] = tuple(lease.clusters)
+            self._lease: Optional[ClusterLease] = lease
+        elif runtime is not None:
             self._devices = list(runtime.all_devices)
+            self._cluster_ids = tuple(runtime.cluster_ids)
+            self._lease = None
             self._runtimes[self._cfg_key(runtime.config)] = runtime
         else:
             if devices is None:
                 import jax
                 devices = jax.devices()
             self._devices = list(devices)
+            self._cluster_ids = tuple(range(len(self._devices)))
+            self._lease = None
         self._streams: Dict[Tuple, OffloadStream] = {}
         self._fused_inflight: Deque[FusedHandle] = collections.deque()
         # estimates are deterministic per (job, selection, batch, policy):
@@ -495,6 +545,45 @@ class Session:
     @property
     def devices(self) -> List[Any]:
         return list(self._devices)
+
+    @property
+    def lease(self) -> ClusterLease:
+        """The fabric window this session owns.  A session constructed
+        the pre-scheduler way (devices / runtime / default) reports its
+        whole window as a synthesized one-tenant lease — the legacy
+        whole-mesh path *is* the single-tenant special case."""
+        if self._lease is not None:
+            return self._lease
+        # the descriptor names the cluster *set*; an adopted runtime may
+        # order its window arbitrarily (device i <-> cluster_ids[i])
+        return ClusterLease(lease_id=0, tenant="default",
+                            clusters=tuple(sorted(self._cluster_ids)))
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Drain in-flight work and release the lease (idempotent).
+
+        After ``close()`` every submit/stage/estimate raises
+        :class:`RuntimeError` — a scheduler may have re-leased the
+        window to another tenant."""
+        if self._closed:
+            return
+        self.drain()
+        self._closed = True
+        if (self._lease is not None and self._lease.scheduler is not None
+                and self._lease.active):
+            # already-released (or externally resized) leases are left
+            # alone — close() is cleanup, not a second release
+            self._lease.release()
+
+    def _check_open(self, op: str) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"{op} on a closed session (its lease over clusters "
+                f"{self._cluster_ids} was released)")
 
     # -- plumbing -----------------------------------------------------------
 
@@ -514,7 +603,8 @@ class Session:
         rt = self._runtimes.get(key)
         if rt is None:
             rt = OffloadRuntime(self._devices, config=cfg,
-                                n_units=self.n_units)
+                                n_units=self.n_units,
+                                cluster_ids=self._cluster_ids)
             self._runtimes[key] = rt
         return rt
 
@@ -582,6 +672,7 @@ class Session:
         (dict submit) or per-job results in submit order (list submit),
         ``explain()`` the predicted-vs-measured breakdown.
         """
+        self._check_open("submit")
         pol = self.policy if policy is None else policy
         resident = isinstance(operands, Residency)
         if resident:
@@ -589,7 +680,11 @@ class Session:
                 raise ValueError(
                     "pass an operand dict, a sequence of them, or "
                     "Residency.RESIDENT")
-            pol = pol.pinned(residency=Residency.RESIDENT)
+            # a resident submit stages nothing: drop any pinned staging
+            # along with the residency pin, so a policy whose staging
+            # primed the buffers (e.g. TREE via sess.stage) is reusable
+            # here instead of tripping the RESIDENT+staging contradiction
+            pol = pol.pinned(residency=Residency.RESIDENT, staging=None)
         elif isinstance(operands, str):
             raise TypeError(
                 "the session API takes typed operands: an operand dict, a "
@@ -692,6 +787,7 @@ class Session:
         (for resident fused redispatch under ``policy.fuse=B``).  Staging
         strategy follows the policy/planner decision; returns it.
         """
+        self._check_open("stage")
         pol = self.policy if policy is None else policy
         multi = isinstance(operands, (list, tuple))
         batch = len(operands) if multi else 1
@@ -739,9 +835,12 @@ class Session:
         ``n`` beyond the session's device count is allowed — the model
         covers the full Occamy topology even when the substrate is
         smaller."""
+        self._check_open("estimate")
         pol = self.policy if policy is None else policy
         if n is None and clusters is None:
-            n = len(self._devices)
+            # default to the session's own fabric window, so a lease's
+            # placement (quadrant structure) shapes the prediction
+            clusters = list(self._cluster_ids)
         return estimate(job, n=n, clusters=clusters, batch=batch, policy=pol,
                         n_units=self.n_units, params=self.params,
                         operands=operands, planner=self.planner)

@@ -466,6 +466,200 @@ def staging_model_error(nbytes: float,
                        simulate_staging(nbytes, cluster_ids, mode, params))
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant fabric contention (the PR-5 scheduler's measurement domain).
+#
+# The paper measures ONE host job owning the whole fabric; spatially
+# partitioning the mesh between tenants (disjoint cluster leases) leaves
+# exactly one shared serial resource: the host core and its link, which
+# issues every tenant's phase-A job information, doorbell store, and
+# phase-I resume.  This model composes the single-job simulator with that
+# shared-host FIFO: each tenant pipelines jobs on its own lease (device
+# phases of different leases run concurrently), while all host-side work
+# serializes in eligibility order — the contention the FabricScheduler's
+# admission model has to predict.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantWorkload:
+    """One tenant's job stream on one cluster lease.
+
+    ``clusters`` is the lease's (global) cluster-id selection; workloads
+    sharing an *identical* selection share the device resource (how the
+    serialized whole-mesh baseline is expressed), disjoint selections run
+    concurrently.  ``window`` bounds the tenant's in-flight jobs (the
+    completion-unit copies); ``arrival`` is the cycle its first dispatch
+    becomes eligible.
+    """
+
+    tenant: str
+    spec: JobSpec
+    clusters: tuple
+    jobs: int = 1
+    arrival: float = 0.0
+    window: int = 4
+
+    def __post_init__(self) -> None:
+        if not self.clusters:
+            raise ValueError("a workload needs at least one cluster")
+        if self.jobs < 1:
+            raise ValueError(f"jobs must be >= 1, got {self.jobs}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if self.arrival < 0:
+            raise ValueError(f"arrival must be >= 0, got {self.arrival}")
+
+
+@dataclasses.dataclass
+class FabricSimResult:
+    """Discrete-event outcome of a multi-tenant fabric schedule."""
+
+    makespan: float                      # first arrival -> last resume done
+    completion: Dict[str, float]         # tenant -> last job's resume end
+    host_busy: float                     # cycles the shared host was occupied
+    work: float                          # sum of ideal serial work (n=1 cycles)
+
+    def utilization(self, num_clusters: int) -> float:
+        """Useful-work fraction of the fabric: ideal serial cycles of the
+        completed jobs over fabric-cycles elapsed.  The numerator is
+        schedule-invariant, so utilization ratios between schedules reduce
+        to inverse makespan ratios."""
+        if self.makespan <= 0:
+            return 0.0
+        return self.work / (num_clusters * self.makespan)
+
+
+def _workload_times(w: TenantWorkload, p: OccamyParams
+                    ) -> tuple:
+    """(t_host, t_dev, t_resume, serial_work) of one job of ``w``.
+
+    ``t_host`` is the host-occupying dispatch leg (phase A + the doorbell
+    store of B); ``t_resume`` the phase-I host leg; ``t_dev`` everything in
+    between (propagation, C..H) from the single-job simulator at the
+    lease's cluster count.
+    """
+    n = len(w.clusters)
+    total = simulate(w.spec, n, "multicast", p).total
+    t_host = (p.host_info_base + p.host_info_per_word * (1 + w.spec.arg_words)
+              + p.host_store_first)
+    t_resume = p.host_resume
+    t_dev = total - t_host - t_resume
+    work = simulate(w.spec, 1, "ideal", p).total
+    return t_host, t_dev, t_resume, work
+
+
+def simulate_fabric(workloads: Sequence[TenantWorkload],
+                    params: OccamyParams = DEFAULT_PARAMS) -> FabricSimResult:
+    """Discrete-event multi-tenant schedule over the shared host.
+
+    Per tenant: dispatches are serial on the host and bounded by the
+    in-flight ``window``; a job's device phases start when its dispatch
+    lands *and* its lease is free (jobs on one lease serialize, leases are
+    concurrent); its resume runs on the host after the device phases end.
+    The host serves dispatch/resume requests in eligibility order (FIFO,
+    resume preferred on ties so windows drain), exactly like the wide-port
+    model above.
+    """
+    if not workloads:
+        raise ValueError("empty workload set")
+    p = params
+    times = [_workload_times(w, p) for w in workloads]
+    lease_free: Dict[tuple, float] = {}
+    host_free = 0.0
+    host_busy = 0.0
+    dispatched = [0] * len(workloads)
+    completed = [0] * len(workloads)
+    last_host_end = [0.0] * len(workloads)
+    dev_end: List[List[float]] = [[] for _ in workloads]
+    completion: Dict[str, float] = {}
+    total_jobs = sum(w.jobs for w in workloads)
+    done = 0
+    while done < total_jobs:
+        best = None      # (eligible, kind, idx)
+        for k, w in enumerate(workloads):
+            # resume of the oldest un-collected job (kind 0: frees windows)
+            if completed[k] < dispatched[k]:
+                cand = (dev_end[k][completed[k]], 0, k)
+                if best is None or cand < best:
+                    best = cand
+            # next dispatch, if the window has room
+            if (dispatched[k] < w.jobs
+                    and dispatched[k] - completed[k] < max(1, w.window)):
+                cand = (max(w.arrival, last_host_end[k]), 1, k)
+                if best is None or cand < best:
+                    best = cand
+        assert best is not None, "scheduler deadlock (window < 1?)"
+        eligible, kind, k = best
+        w = workloads[k]
+        t_host, t_dev, t_resume, _ = times[k]
+        start = max(host_free, eligible)
+        if kind == 1:                               # dispatch
+            host_free = start + t_host
+            host_busy += t_host
+            last_host_end[k] = host_free
+            key = tuple(w.clusters)
+            dev_start = max(host_free, lease_free.get(key, 0.0))
+            lease_free[key] = dev_start + t_dev
+            dev_end[k].append(dev_start + t_dev)
+            dispatched[k] += 1
+        else:                                       # resume (job collected)
+            host_free = start + t_resume
+            host_busy += t_resume
+            completed[k] += 1
+            completion[w.tenant] = max(completion.get(w.tenant, 0.0),
+                                       host_free)
+            done += 1
+    # the declared span is first arrival -> last resume done; completion
+    # times stay absolute (same clock as the arrivals)
+    makespan = (max(completion.values())
+                - min(w.arrival for w in workloads))
+    work = sum(t[3] * w.jobs for t, w in zip(times, workloads))
+    return FabricSimResult(makespan=makespan, completion=completion,
+                           host_busy=host_busy, work=work)
+
+
+def fabric_makespan_model(workloads: Sequence[TenantWorkload],
+                          params: OccamyParams = DEFAULT_PARAMS) -> float:
+    """Closed-form makespan prediction — the §6 treatment extended to the
+    multi-tenant fabric.  Three lower bounds, composed by max:
+
+    * **tenant pipeline** — a tenant's jobs flow at the pipeline period
+      ``max(t_host + t_resume, t_dev)`` (host leg hidden behind the
+      previous job's device phases once the window is open);
+    * **shared host** — every dispatch and resume serializes on the host,
+      plus the shortest device tail after the last dispatch;
+    * **shared lease** — workloads on an identical cluster selection
+      serialize their device phases (the whole-mesh baseline's bound).
+
+    The second-order effects the discrete-event model resolves (host FIFO
+    interleaving, window drain order) are deliberately dropped — the same
+    abstraction level as the paper's analytical model (§6, < 15 % error).
+    """
+    if not workloads:
+        raise ValueError("empty workload set")
+    times = [_workload_times(w, params) for w in workloads]
+    bounds = []
+    by_lease: Dict[tuple, List[int]] = {}
+    for k, w in enumerate(workloads):
+        t_host, t_dev, t_resume, _ = times[k]
+        period = max(t_host + t_resume, t_dev)
+        bounds.append(w.arrival + t_host + (w.jobs - 1) * period
+                      + t_dev + t_resume)
+        by_lease.setdefault(tuple(w.clusters), []).append(k)
+    host_work = sum((times[k][0] + times[k][2]) * w.jobs
+                    for k, w in enumerate(workloads))
+    bounds.append(min(w.arrival for w in workloads) + host_work
+                  + min(t[1] for t in times))
+    for members in by_lease.values():
+        dev_work = sum(times[k][1] * workloads[k].jobs for k in members)
+        first = min(workloads[k].arrival + times[k][0] for k in members)
+        bounds.append(first + dev_work
+                      + min(times[k][2] for k in members))
+    # same span convention as simulate_fabric: first arrival -> last done
+    return max(bounds) - min(w.arrival for w in workloads)
+
+
 @dataclasses.dataclass(frozen=True)
 class StagingCostModel:
     """Calibrated staging-cost model for an arbitrary substrate (wallclock).

@@ -17,12 +17,28 @@ import time
 
 import numpy as np
 
-from repro.api import ServeConfig, ServeEngine, Staging
+from repro.api import (
+    FabricScheduler, ServeConfig, ServeEngine, ServeTenant, Staging,
+)
 from repro.data import DataConfig, SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import get, init_params, reduced
 
 import jax
+
+
+def _continuous_trace(args, cfg):
+    """The streamed-request trace both engines share: variable-length
+    prompts under a Poisson-ish arrival process."""
+    rng = np.random.default_rng(args.seed)
+    lens = rng.integers(max(2, args.prompt_len // 2),
+                        args.prompt_len + 1, size=args.requests)
+    reqs = [(rng.integers(0, cfg.vocab_size, (int(s),)).astype(np.int32),
+             args.new_tokens) for s in lens]
+    gaps = rng.poisson(1.0 / max(args.arrival_rate, 1e-6),
+                       size=args.requests)
+    arrivals = np.cumsum(gaps) - gaps[0]
+    return reqs, arrivals, lens
 
 
 def main() -> None:
@@ -45,6 +61,13 @@ def main() -> None:
                     choices=["direct", "tree", "tree_reshard"],
                     help="replicated-placement strategy for weights and "
                          "prefill inserts (repro.api.Staging)")
+    ap.add_argument("--fabric", action="store_true",
+                    help="serve as a lease-holding fabric tenant: hold a "
+                         "--serve-floor cluster floor, grow to the free "
+                         "fabric per decode burst, shrink back between "
+                         "bursts (repro.api.FabricScheduler)")
+    ap.add_argument("--serve-floor", type=int, default=1,
+                    help="resident lease size between bursts (fabric mode)")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching: stream --requests variable-"
                          "length prompts through the slot scheduler")
@@ -69,20 +92,49 @@ def main() -> None:
                        decode_mode=args.decode_mode,
                        decode_chunk=args.decode_chunk,
                        staging=Staging(args.staging))
+    if args.fabric:
+        # serve as a fabric tenant: a resident floor lease, elastically
+        # grown to the free fabric for each decode burst; the clusters
+        # released between bursts are leasable by offload tenants
+        sched = FabricScheduler(jax.devices())
+        tenant = ServeTenant(sched, cfg, params, scfg,
+                             floor=min(args.serve_floor, sched.num_clusters))
+        t0 = time.time()
+        if args.continuous:
+            reqs, arrivals, _ = _continuous_trace(args, cfg)
+            outs = tenant.generate_many(reqs,
+                                        arrival_steps=arrivals.tolist())
+            dt = time.time() - t0
+            total = sum(len(o) for o in outs)
+            head = f"continuous, {args.requests} requests"
+            samples = [o[:12].tolist() for o in outs[:2]]
+        else:
+            stream = SyntheticStream(
+                DataConfig(vocab_size=cfg.vocab_size,
+                           batch_size=args.batch,
+                           seq_len=args.prompt_len, seed=args.seed), cfg)
+            out = tenant.generate(stream.batch(0)["tokens"],
+                                  args.new_tokens)
+            dt = time.time() - t0
+            total = args.batch * args.new_tokens
+            head = f"batch {args.batch}"
+            samples = [out[b][:12].tolist() for b in range(min(2, args.batch))]
+        print(f"[serve] fabric tenant ({head}): {total} tokens in "
+              f"{dt:.2f}s ({total / dt:.1f} tok/s); lease floor "
+              f"{tenant.lease.n}/{sched.num_clusters} clusters, burst "
+              f"window {tenant.peak_burst}, free between bursts: "
+              f"{len(sched.free_clusters())}")
+        for i, s in enumerate(samples):
+            print(f"  slot {i}: -> {s}")
+        tenant.close()
+        return
     engine = ServeEngine(cfg, params, mesh, scfg)
     # weight placement honours --staging: under "tree" every replicated
     # leaf crosses the host link once and fans out device-to-device
     engine.place_params(params)
 
     if args.continuous:
-        rng = np.random.default_rng(args.seed)
-        lens = rng.integers(max(2, args.prompt_len // 2),
-                            args.prompt_len + 1, size=args.requests)
-        reqs = [(rng.integers(0, cfg.vocab_size, (int(s),)).astype(np.int32),
-                 args.new_tokens) for s in lens]
-        gaps = rng.poisson(1.0 / max(args.arrival_rate, 1e-6),
-                           size=args.requests)
-        arrivals = np.cumsum(gaps) - gaps[0]
+        reqs, arrivals, lens = _continuous_trace(args, cfg)
         t0 = time.time()
         outs = engine.generate_many(reqs, arrival_steps=arrivals.tolist())
         dt = time.time() - t0

@@ -1,6 +1,7 @@
 """Serving substrate: batched prefill/decode engine + continuous batching."""
 from repro.serve.engine import (
-    ServeConfig, ServeEngine, build_ragged_step, build_serve_step,
+    ServeConfig, ServeEngine, ServeTenant, build_ragged_step,
+    build_serve_step,
 )
-__all__ = ["ServeConfig", "ServeEngine", "build_ragged_step",
+__all__ = ["ServeConfig", "ServeEngine", "ServeTenant", "build_ragged_step",
            "build_serve_step"]

@@ -54,7 +54,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import broadcast as bc
 from repro.core.completion import CompletionUnit
-from repro.core.policy import Staging, coerce_enum
+from repro.core.fabric import (
+    ClusterLease, FabricScheduler, LeaseUnavailable, Tenant,
+)
+from repro.core.policy import Staging, TenantKind, coerce_enum
 from repro.dist.sharding import batch_specs, cache_specs, param_specs, to_shardings
 from repro.models.config import ModelConfig
 from repro.models.model import (
@@ -295,10 +298,17 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params: Pytree, mesh: Mesh,
-                 scfg: ServeConfig, call: CallConfig = CallConfig(moe_no_drop=True)):
+                 scfg: ServeConfig, call: CallConfig = CallConfig(moe_no_drop=True),
+                 cluster_ids: Optional[Sequence[int]] = None):
         self.cfg, self.scfg, self.call = cfg, scfg, call
         self.mesh = mesh
         self.params = params
+        # the engine's fabric window (global cluster ids, one per mesh
+        # device): a lease-holding engine derives its weight-placement
+        # fan-out tree from the real placement, so cross-quadrant edges
+        # are what the lease actually pays
+        self.cluster_ids = (None if cluster_ids is None
+                            else tuple(int(c) for c in cluster_ids))
         # one _serve_shardings resolution shared by every program builder
         self._shardings = _serve_shardings(cfg, mesh, scfg.batch, scfg.max_len)
         self._tok_sharding = self._shardings[2]
@@ -372,7 +382,8 @@ class ServeEngine:
 
     def _get_stager(self) -> bc.TreeStager:
         if self._stager is None:
-            self._stager = bc.TreeStager(list(self.mesh.devices.flat))
+            self._stager = bc.TreeStager(list(self.mesh.devices.flat),
+                                         cluster_ids=self.cluster_ids)
         return self._stager
 
     def _put_replicated(self, arr: np.ndarray):
@@ -669,3 +680,119 @@ class ServeEngine:
         self.unit.collect(job)
         self.stats["xla_dispatches"] += 1
         self.stats["tokens_emitted"] += tokens
+
+
+class ServeTenant:
+    """A lease-holding serve tenant: elastic grow/shrink between bursts.
+
+    The pre-scheduler engine owned its mesh for the process lifetime —
+    idle decode capacity was dead capacity.  A ``ServeTenant`` instead
+    holds a *floor* lease on the :class:`~repro.core.fabric.
+    FabricScheduler` and, per decode burst (one ``generate`` /
+    ``generate_many`` call), grows toward its preferred ``burst`` size
+    using whatever clusters are free, shrinking back to the floor when
+    the burst completes — bursty offload tenants get the head-room
+    between bursts, exactly the serve/offload fabric split of the PR-5
+    scheduler.
+
+    One :class:`ServeEngine` is kept per distinct lease window (the
+    scheduler's in-place resizing makes the windows recur), so weight
+    placement and compiled programs are warm across burst cycles at the
+    cost of one engine per window actually seen.
+    """
+
+    def __init__(self, scheduler: FabricScheduler, cfg: ModelConfig,
+                 host_params: Pytree, scfg: ServeConfig, *,
+                 tenant: str = "serve",
+                 floor: int = 1,
+                 burst: Optional[int] = None,
+                 call: CallConfig = CallConfig(moe_no_drop=True)):
+        if floor < 1:
+            raise ValueError(f"floor must be >= 1, got {floor}")
+        self.scheduler = scheduler
+        self.cfg, self.scfg, self.call = cfg, scfg, call
+        self.host_params = host_params
+        self.floor = floor
+        self.burst = scheduler.num_clusters if burst is None else burst
+        if self.burst < floor:
+            raise ValueError(
+                f"burst size {self.burst} below the floor {floor}")
+        self.lease: ClusterLease = scheduler.request(
+            Tenant(tenant, kind=TenantKind.SERVE), n=floor)
+        self._engines: Dict[Tuple[int, ...], ServeEngine] = {}
+
+    def _engine(self) -> ServeEngine:
+        key = self.lease.clusters
+        eng = self._engines.get(key)
+        if eng is None:
+            devs = self.lease.devices
+            mesh = Mesh(np.asarray(devs).reshape(len(devs), 1),
+                        ("data", "model"))
+            eng = ServeEngine(self.cfg, self.host_params, mesh, self.scfg,
+                              self.call, cluster_ids=key)
+            eng.place_params(self.host_params)
+            self._engines[key] = eng
+        return eng
+
+    def _grow(self) -> None:
+        # the global free count is an upper bound; the free space may be
+        # fragmented into windows smaller than it, so walk the target
+        # down until a contiguous grow (or relocation) fits — a burst
+        # takes the largest window available, never fails the generate
+        headroom = len(self.scheduler.free_clusters())
+        target = max(self.floor, min(self.burst, self.lease.n + headroom))
+        while target > self.lease.n:
+            try:
+                self.lease = self.scheduler.resize(self.lease, target)
+                return
+            except LeaseUnavailable:
+                target -= 1
+
+    def _shrink(self) -> None:
+        if self.lease.n != self.floor:
+            self.lease = self.scheduler.resize(self.lease, self.floor)
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 extra_inputs: Optional[Dict[str, np.ndarray]] = None
+                 ) -> np.ndarray:
+        """One decode burst: grow the lease, generate, shrink back."""
+        self._grow()
+        try:
+            return self._engine().generate(prompts, n_new, extra_inputs)
+        finally:
+            self._shrink()
+
+    def generate_many(self, requests: Sequence[Tuple[np.ndarray, int]],
+                      arrival_steps: Optional[Sequence[int]] = None
+                      ) -> List[np.ndarray]:
+        """One continuous-batching burst under the elastic lease."""
+        self._grow()
+        try:
+            return self._engine().generate_many(requests, arrival_steps)
+        finally:
+            self._shrink()
+
+    @property
+    def windows(self) -> Tuple[Tuple[int, ...], ...]:
+        """Every lease window this tenant has served a burst on (each
+        backs one warm engine), smallest first."""
+        return tuple(sorted(self._engines, key=len))
+
+    @property
+    def peak_burst(self) -> int:
+        """The widest burst window served so far (clusters)."""
+        return max((len(w) for w in self._engines), default=self.lease.n)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Engine counters summed across every lease window served."""
+        agg: Dict[str, int] = {}
+        for eng in self._engines.values():
+            for k, v in eng.stats.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def close(self) -> None:
+        """Release the floor lease (the tenant leaves the fabric)."""
+        if self.lease.active:
+            self.lease.release()

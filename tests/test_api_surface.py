@@ -32,11 +32,13 @@ def _params(fn):
 
 
 EXPORTS = (
-    "AUTO", "Completion", "Estimate", "Explain", "InfoDist", "JobHandle",
-    "MulticastRequest", "OffloadConfig", "OffloadPolicy", "OffloadRuntime",
-    "PAPER_JOBS", "PaperJob", "PlanDecision", "PlanStats", "Planner",
-    "Residency", "ServeConfig", "ServeEngine", "Session", "SessionHandle",
-    "Staging", "estimate", "make_instances", "predict_staging",
+    "AUTO", "ClusterLease", "Completion", "Estimate", "Explain",
+    "FabricScheduler", "InfoDist", "JobHandle", "LeaseError",
+    "LeaseUnavailable", "MulticastRequest", "OffloadConfig", "OffloadPolicy",
+    "OffloadRuntime", "PAPER_JOBS", "PaperJob", "PlanDecision", "PlanStats",
+    "Planner", "Residency", "SchedulerPolicy", "ServeConfig", "ServeEngine",
+    "ServeTenant", "Session", "SessionHandle", "Staging", "Tenant",
+    "TenantKind", "estimate", "make_instances", "predict_staging",
 )
 
 ENUMS = {
@@ -44,6 +46,7 @@ ENUMS = {
     "Residency": ("FRESH", "RESIDENT"),
     "InfoDist": ("MULTICAST", "P2P_CHAIN"),
     "Completion": ("UNIT", "CENTRAL_COUNTER"),
+    "TenantKind": ("OFFLOAD", "SERVE"),
 }
 
 SNAPSHOT = {
@@ -55,8 +58,8 @@ SNAPSHOT = {
     "Planner": ("params=", "max_fuse=", "tree_min_bytes="),
     "Planner.decide": ("job", "clusters", "batch", "policy", "n_units",
                        "operands="),
-    "Session": ("devices=", "policy=", "n_units=", "params=", "planner=",
-                "runtime="),
+    "Session": ("devices=", "lease=", "policy=", "n_units=", "params=",
+                "planner=", "runtime="),
     "Session.submit": ("job", "operands", "policy=", "job_args=", "n=",
                        "request=", "clusters="),
     "Session.estimate": ("job", "batch=", "policy=", "n=", "clusters=",
@@ -64,7 +67,22 @@ SNAPSHOT = {
     "Session.stage": ("job", "operands", "policy=", "n=", "request=",
                       "clusters="),
     "Session.drain": (),
+    "Session.close": (),
     "Session.runtime": ("policy=",),
+    "FabricScheduler": ("devices=", "num_clusters=", "params=", "policy="),
+    "FabricScheduler.request": ("tenant", "n=", "clusters=", "job=",
+                                "batch=", "queue="),
+    "FabricScheduler.release": ("lease",),
+    "FabricScheduler.resize": ("lease", "n"),
+    "FabricScheduler.session": ("tenant", "n=", "clusters=", "job=",
+                                "batch=", "**session_kwargs"),
+    "ClusterLease": ("lease_id", "tenant", "clusters", "scheduler="),
+    "ClusterLease.requests": (),
+    "Tenant": ("name", "kind=", "weight="),
+    "SchedulerPolicy": ("placement=", "align=", "share_slack="),
+    "ServeTenant": ("scheduler", "cfg", "host_params", "scfg", "tenant=",
+                    "floor=", "burst=", "call="),
+    "ServeTenant.generate": ("prompts", "n_new", "extra_inputs="),
     "SessionHandle.wait": (),
     "SessionHandle.explain": (),
     "estimate": ("job", "n=", "clusters=", "batch=", "policy=", "n_units=",

@@ -1,0 +1,512 @@
+"""Fabric scheduler (ISSUE-5): leases, placement, contention, isolation.
+
+Model-level behavior (admission, placement, queueing, resize, the
+multi-tenant contention model) runs in-process — the scheduler needs no
+devices.  Dispatch-level isolation (the acceptance criterion: concurrent
+sessions on disjoint leases are bit-equal to sequential full-mesh runs)
+runs in an 8-device subprocess like the other dispatch tests.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import jobs
+from repro.core import multicast as mc
+from repro.core.fabric import (
+    ClusterLease, FabricScheduler, LeaseError, LeaseUnavailable,
+    SchedulerPolicy, Tenant,
+)
+from repro.core.params import OccamyParams
+from repro.core.policy import (
+    AUTO, OffloadPolicy, Residency, Staging, TenantKind,
+)
+from repro.core.session import Session, estimate
+from repro.core.simulator import (
+    TenantWorkload, fabric_makespan_model, model_error, simulate_fabric,
+)
+
+TWO_QUADRANTS = OccamyParams(num_quadrants=2)   # an 8-cluster small grid
+
+
+# ---------------------------------------------------------------------------
+# Lease windows: multicast legality + tree legality
+# ---------------------------------------------------------------------------
+
+
+def test_window_encoding_aligned_is_single_request():
+    for start, n in ((0, 8), (8, 8), (4, 4), (16, 16), (3, 1)):
+        reqs = mc.encode_contiguous_window(start, n)
+        assert len(reqs) == 1
+        assert sorted(mc.decode_cluster_selection(reqs[0])) == list(
+            range(start, start + n))
+
+
+def test_window_encoding_covers_any_window_exactly():
+    for start, n in ((3, 5), (1, 7), (5, 11), (0, 32), (31, 1)):
+        reqs = mc.encode_contiguous_window(start, n)
+        got = sorted(c for r in reqs
+                     for c in mc.decode_cluster_selection(r))
+        assert got == list(range(start, start + n)), (start, n, reqs)
+
+
+def test_window_encoding_bounds():
+    with pytest.raises(ValueError):
+        mc.encode_contiguous_window(0, 0)
+    with pytest.raises(ValueError):
+        mc.encode_contiguous_window(30, 4)      # spills past cluster 31
+
+
+def test_lease_requests_and_tree_reach_the_window():
+    sched = FabricScheduler(num_clusters=32)
+    lease = sched.request("t", n=8)
+    assert len(lease.requests()) == 1           # aligned pow2 => one mask
+    tree = lease.tree()
+    assert tree.reached() == lease.clusters
+    assert tree.n_edges == lease.n - 1
+
+
+def test_lease_validation_and_noncontiguous_cover():
+    with pytest.raises(ValueError):
+        ClusterLease(1, "t", ())
+    with pytest.raises(ValueError):
+        ClusterLease(1, "t", (3, 1))            # unsorted
+    with pytest.raises(ValueError):
+        ClusterLease(1, "t", (-1, 0))
+    # a synthesized lease over a non-contiguous runtime window still
+    # covers exactly its clusters (multiple subcube requests)
+    lease = ClusterLease(1, "t", (0, 2, 4, 6))
+    got = sorted(c for r in lease.requests()
+                 for c in mc.decode_cluster_selection(r))
+    assert got == [0, 2, 4, 6]
+
+
+# ---------------------------------------------------------------------------
+# Admission: rejection, queueing, model-driven placement and sizing
+# ---------------------------------------------------------------------------
+
+
+def test_lease_larger_than_fabric_rejected():
+    sched = FabricScheduler(num_clusters=32)
+    with pytest.raises(ValueError, match="exceeds the 32-cluster fabric"):
+        sched.request("t", n=64)
+    with pytest.raises(ValueError):
+        sched.request("t", n=0)
+    with pytest.raises(ValueError):
+        sched.request("t", clusters=[30, 31, 32])
+
+
+def test_overlapping_lease_rejected_and_disjoint_grants():
+    sched = FabricScheduler(num_clusters=32)
+    a = sched.request("A", n=8)
+    b = sched.request("B", n=8)
+    assert set(a.clusters).isdisjoint(b.clusters)
+    with pytest.raises(LeaseUnavailable, match="already leased"):
+        sched.request("C", clusters=list(a.clusters))
+    with pytest.raises(ValueError, match="contiguous"):
+        sched.request("C", clusters=[16, 18])
+    # full fabric: no window of 32 left
+    with pytest.raises(LeaseUnavailable):
+        sched.request("C", n=32)
+
+
+def test_queueing_grants_fifo_on_release():
+    sched = FabricScheduler(num_clusters=8)
+    a = sched.request("A", n=8)
+    p1 = sched.request("B", n=4, queue=True)
+    p2 = sched.request("C", n=2, queue=True)
+    assert not p1.ready and not p2.ready and len(sched.pending) == 2
+    sched.release(a)
+    assert p1.ready and p2.ready
+    assert set(p1.lease.clusters).isdisjoint(p2.lease.clusters)
+    assert not sched.pending
+
+
+def test_model_placement_prefers_quadrant_local_windows():
+    # clusters 0 and 1 busy: first_fit straddles quadrants ([2..5]),
+    # the model-scored placement stays inside quadrant 1 ([4..7])
+    for placement, expected in (("model", (4, 5, 6, 7)),
+                                ("first_fit", (2, 3, 4, 5))):
+        sched = FabricScheduler(
+            num_clusters=8, params=TWO_QUADRANTS,
+            policy=SchedulerPolicy(placement=placement, align=False))
+        sched.request("busy", clusters=[0, 1])
+        lease = sched.request("t", n=4)
+        assert lease.clusters == expected, placement
+    model = FabricScheduler(num_clusters=8, params=TWO_QUADRANTS)
+    model.request("busy", clusters=[0, 1])
+    chosen = model.request("t", n=4)
+    assert chosen.tree(TWO_QUADRANTS.clusters_per_quadrant
+                       ).cross_quadrant_edges(
+        TWO_QUADRANTS.clusters_per_quadrant) == 0
+
+
+def test_model_driven_slice_sizing():
+    # a fine-grained job gets a small slice (overheads grow with n and
+    # the share-slack prefers leaving fabric to co-tenants); a
+    # compute-heavy job gets a bigger one
+    sched = FabricScheduler(num_clusters=32)
+    small = sched.request("a", job=jobs.make_axpy(1024), batch=16)
+    big = sched.request("b", job=jobs.make_matmul(64, 64, 64), batch=16)
+    assert small.n < big.n
+    assert small.n >= 1 and big.n <= 32
+    with pytest.raises(ValueError, match="one of n / clusters / job"):
+        sched.request("c")
+
+
+def test_tenant_registry_and_kinds():
+    sched = FabricScheduler(num_clusters=8)
+    lease = sched.request(Tenant("serve", kind=TenantKind.SERVE), n=2)
+    assert sched.tenant("serve").kind is TenantKind.SERVE
+    assert lease.tenant == "serve"
+    with pytest.raises(ValueError):
+        Tenant("")
+    with pytest.raises(ValueError):
+        SchedulerPolicy(placement="best_fit")
+
+
+# ---------------------------------------------------------------------------
+# Resize: the serve tenant's elastic grow/shrink
+# ---------------------------------------------------------------------------
+
+
+def test_resize_keeps_start_and_grants_pending():
+    sched = FabricScheduler(num_clusters=8)
+    lease = sched.request("serve", n=2)
+    grown = sched.resize(lease, 6)
+    assert grown.clusters[0] == lease.clusters[0]       # extended in place
+    assert grown.n == 6
+    pend = sched.request("offload", n=4, queue=True)
+    assert not pend.ready
+    shrunk = sched.resize(grown, 2)
+    assert shrunk.clusters == lease.clusters
+    assert pend.ready and pend.lease.n == 4             # freed head-room
+    # stale lease objects are rejected after a resize
+    with pytest.raises(LeaseError, match="stale|current"):
+        sched.release(grown)
+    with pytest.raises(LeaseUnavailable):
+        sched.resize(shrunk, 8)                         # offload holds 4
+    sched.release(shrunk)
+    sched.release(pend.lease)
+    assert sched.free_clusters() == tuple(range(8))
+
+
+def test_resize_relocation_grants_pending():
+    # relocation frees the old window; queued requests for it must not
+    # starve while the clusters sit free
+    sched = FabricScheduler(num_clusters=8)
+    a = sched.request("A", clusters=[0, 1])
+    sched.request("B", clusters=[2, 3])
+    pend = sched.request("C", clusters=[0, 1], queue=True)
+    grown = sched.resize(a, 4)              # cannot extend: relocates
+    assert grown.clusters == (4, 5, 6, 7)
+    assert pend.ready and pend.lease.clusters == (0, 1)
+
+
+def test_resize_bounds():
+    sched = FabricScheduler(num_clusters=8)
+    lease = sched.request("t", n=2)
+    with pytest.raises(ValueError):
+        sched.resize(lease, 0)
+    with pytest.raises(ValueError):
+        sched.resize(lease, 9)
+    assert sched.resize(lease, 2) is lease              # no-op
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant contention model + its closed form
+# ---------------------------------------------------------------------------
+
+
+def _mixed_workloads():
+    return [
+        TenantWorkload("serve", jobs.make_matmul(16, 16, 16).spec,
+                       tuple(range(0, 8)), jobs=16),
+        TenantWorkload("axpy", jobs.make_axpy(1024).spec,
+                       tuple(range(8, 16)), jobs=16),
+        TenantWorkload("cov", jobs.make_covariance(32, 64).spec,
+                       tuple(range(16, 24)), jobs=16),
+        TenantWorkload("atax", jobs.make_atax(64, 64).spec,
+                       tuple(range(24, 32)), jobs=16),
+    ]
+
+
+def test_disjoint_leases_beat_serialized_whole_mesh():
+    ws = _mixed_workloads()
+    sched = simulate_fabric(ws)
+    full = tuple(range(32))
+    serial = simulate_fabric(
+        [TenantWorkload(w.tenant, w.spec, full, jobs=w.jobs, window=1)
+         for w in ws])
+    assert sched.makespan < serial.makespan
+    assert sched.utilization(32) / serial.utilization(32) >= 1.5
+    assert sched.work == serial.work                    # same useful work
+
+
+def test_fabric_makespan_model_within_paper_bar():
+    for ws in (_mixed_workloads(),
+               [TenantWorkload("solo", jobs.make_axpy(4096).spec,
+                               tuple(range(8)), jobs=8)],
+               [TenantWorkload(w.tenant, w.spec, tuple(range(32)),
+                               jobs=w.jobs, window=1)
+                for w in _mixed_workloads()]):
+        measured = simulate_fabric(ws).makespan
+        predicted = fabric_makespan_model(ws)
+        assert model_error(predicted, measured) < 0.15, ws[0].tenant
+
+
+def test_makespan_is_arrival_relative():
+    spec = jobs.make_axpy(1024).spec
+    base = simulate_fabric(
+        [TenantWorkload("a", spec, (0, 1, 2, 3), jobs=4)])
+    late = simulate_fabric(
+        [TenantWorkload("a", spec, (0, 1, 2, 3), jobs=4,
+                        arrival=100000.0)])
+    assert late.makespan == pytest.approx(base.makespan)
+    assert fabric_makespan_model(
+        [TenantWorkload("a", spec, (0, 1, 2, 3), jobs=4,
+                        arrival=100000.0)]) == pytest.approx(
+        fabric_makespan_model(
+            [TenantWorkload("a", spec, (0, 1, 2, 3), jobs=4)]))
+
+
+def test_shared_lease_serializes_device_phases():
+    spec = jobs.make_axpy(1024).spec
+    shared = simulate_fabric(
+        [TenantWorkload("a", spec, (0, 1, 2, 3), jobs=4),
+         TenantWorkload("b", spec, (0, 1, 2, 3), jobs=4)])
+    disjoint = simulate_fabric(
+        [TenantWorkload("a", spec, (0, 1, 2, 3), jobs=4),
+         TenantWorkload("b", spec, (4, 5, 6, 7), jobs=4)])
+    assert disjoint.makespan < shared.makespan
+
+
+# ---------------------------------------------------------------------------
+# Policy combinations + the fused explain fix (satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_invalid_policy_combinations():
+    with pytest.raises(ValueError, match="RESIDENT stages no operands"):
+        OffloadPolicy(residency=Residency.RESIDENT, staging=Staging.TREE)
+    with pytest.raises(ValueError, match="RESIDENT stages no operands"):
+        OffloadPolicy(residency=Residency.RESIDENT,
+                      staging=Staging.HOST_FANOUT, fuse=2)
+    # DIRECT (a no-op for resident) and unset stay legal
+    OffloadPolicy(residency=Residency.RESIDENT, staging=Staging.DIRECT)
+    AUTO.pinned(residency=Residency.RESIDENT)
+
+
+def test_resident_submit_drops_pinned_staging():
+    """A tree-staging policy is reusable for the resident redispatch it
+    primed: submit pins residency and drops the staging pin instead of
+    synthesizing the forbidden RESIDENT+TREE combination."""
+    sess = Session(devices=["cpu0", "cpu1"])
+    job = jobs.make_axpy(64)
+    pol = OffloadPolicy(staging=Staging.TREE, window=1)
+    # nothing staged yet, so the dispatch itself fails with "no plan" —
+    # but only AFTER the policy passed validation (the old bug raised
+    # ValueError from inside pinned() before reaching the plan lookup)
+    with pytest.raises(KeyError, match="no dispatch plan"):
+        sess.submit(job, Residency.RESIDENT, policy=pol, n=1)
+
+
+def test_estimate_reports_per_instance_and_per_launch_terms():
+    job = jobs.make_axpy(1024)
+    est = estimate(job, n=8, batch=8, policy=OffloadPolicy(fuse=4))
+    from repro.core.phases import Phase
+    from repro.core.session import CONST_PHASES
+    per_launch = est.per_launch_phases
+    per_inst = est.per_instance_phases
+    for ph, v in est.phases.items():
+        if ph in CONST_PHASES:
+            assert per_launch[ph] == v
+            assert per_inst[ph] == pytest.approx(v / 4)
+        else:
+            assert per_launch[ph] == pytest.approx(v * 4)
+            assert per_inst[ph] == v
+    text = est.table()
+    assert "per-instance" in text and "per-launch (B=4)" in text
+    # an unfused estimate keeps the single-column table
+    unfused = estimate(job, n=8, policy=OffloadPolicy(fuse=1, window=1))
+    assert "per-launch" not in unfused.table()
+    assert f"phase {Phase.E.name}" in unfused.table()
+
+
+# ---------------------------------------------------------------------------
+# Session error paths (satellite): closed sessions, resident misuse
+# ---------------------------------------------------------------------------
+
+
+def test_submit_after_close_raises():
+    sess = Session(devices=["cpu0"])      # duck devices: no dispatch happens
+    sess.close()
+    assert sess.closed
+    job = jobs.make_axpy(64)
+    with pytest.raises(RuntimeError, match="closed session"):
+        sess.submit(job, {"x": np.zeros(64), "y": np.zeros(64)})
+    with pytest.raises(RuntimeError, match="closed session"):
+        sess.estimate(job)
+    with pytest.raises(RuntimeError, match="closed session"):
+        sess.stage(job, {"x": np.zeros(64), "y": np.zeros(64)})
+    sess.close()                          # idempotent
+
+
+def test_close_after_external_release_is_quiet():
+    sched = FabricScheduler(devices=["d0", "d1", "d2", "d3"])
+    lease = sched.request("t", n=2)
+    sess = Session(lease=lease)
+    sched.release(lease)                  # e.g. an external reclaim
+    sess.close()                          # cleanup, not a second release
+    assert sess.closed and not lease.active
+
+
+def test_serve_tenant_grow_survives_fragmented_fabric():
+    # free count 6 but the largest contiguous window is 4: the burst
+    # must land on the widest window that fits, not raise
+    from repro.serve.engine import ServeTenant
+    sched = FabricScheduler(num_clusters=8)
+    tenant = ServeTenant(sched, cfg=None, host_params=None, scfg=None,
+                         floor=1, burst=8)
+    assert tenant.lease.clusters == (0,)
+    sched.request("offload", clusters=[3])
+    tenant._grow()
+    assert tenant.lease.n == 4            # the largest free window
+    tenant._shrink()
+    assert tenant.lease.n == 1
+    tenant.close()
+
+
+def test_session_lease_conflicts_rejected():
+    sched = FabricScheduler(num_clusters=4)
+    lease = sched.request("t", n=2)
+    with pytest.raises(ValueError, match="lease or devices"):
+        Session(devices=["cpu0"], lease=lease)
+    with pytest.raises(LeaseError, match="model-only"):
+        Session(lease=lease)              # scheduler has no devices
+    # a plain session synthesizes its whole window as a one-tenant lease
+    sess = Session(devices=["cpu0", "cpu1"])
+    assert isinstance(sess.lease, ClusterLease)
+    assert sess.lease.clusters == (0, 1)
+    assert sess.lease.tenant == "default"
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: concurrent sessions on disjoint leases are bit-equal to
+# sequential full-mesh runs on the same selections (8-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_disjoint_lease_sessions_bit_equal_to_sequential(subproc):
+    subproc("""
+import numpy as np
+import jax
+from repro.api import FabricScheduler, Residency, Session
+from repro.core import jobs
+
+sched = FabricScheduler(jax.devices())
+A = sched.request("tenantA", clusters=[0, 1, 2, 3])
+B = sched.request("tenantB", clusters=[4, 5, 6, 7])
+sa = Session(lease=A)
+sb = Session(lease=B)
+
+axpy = jobs.make_axpy(1024)
+atax = jobs.make_atax(32, 32)      # psum reduction: order-sensitive
+ia, ea = jobs.make_instances(axpy, 4, seed0=0)
+it, et = jobs.make_instances(atax, 4, seed0=10)
+
+# concurrent: interleaved submits, both leases in flight at once
+handles = []
+for k in range(4):
+    handles.append(("A", sa.submit(axpy, ia[k])))
+    handles.append(("B", sb.submit(atax, it[k])))
+conc = {"A": [], "B": []}
+for who, h in handles:
+    conc[who].append(h.wait())
+
+# plans are keyed by the lease's *global* ids
+assert any(k[1] == (4, 5, 6, 7) for k in sb.runtime()._plans)
+assert any(k[1] == (0, 1, 2, 3) for k in sa.runtime()._plans)
+
+# sequential: one whole-mesh session, same selections, one job at a time
+sa.close(); sb.close()
+assert not A.active and not B.active
+full = Session()
+seq = {"A": [], "B": []}
+for k in range(4):
+    seq["A"].append(full.submit(axpy, ia[k], clusters=[0, 1, 2, 3],
+                                ).wait())
+    seq["B"].append(full.submit(atax, it[k], clusters=[4, 5, 6, 7],
+                                ).wait())
+
+for who, exps in (("A", ea), ("B", et)):
+    for got_c, got_s, exp in zip(conc[who], seq[who], exps):
+        assert np.array_equal(np.asarray(got_c), np.asarray(got_s)), who
+        assert np.allclose(got_s, exp)
+print("OK")
+""")
+
+
+def test_lease_session_quadrant_aware_tree_staging(subproc):
+    """A lease away from cluster 0 derives its staging tree from its real
+    fabric position: one h2d upload, n-1 d2d edges, global-root device."""
+    subproc("""
+import numpy as np
+import jax
+from repro.api import FabricScheduler, OffloadPolicy, Session, Staging
+from repro.core import jobs
+
+sched = FabricScheduler(jax.devices())
+sched.request("pad", clusters=[0, 1, 2, 3])
+lease = sched.request("t", clusters=[4, 5, 6, 7])
+sess = Session(lease=lease)
+job = jobs.make_covariance(16, 32)
+ops, exp = job.make_instance(0)
+h = sess.submit(job, ops, policy=OffloadPolicy(staging=Staging.TREE,
+                                               fuse=1, window=1))
+assert np.allclose(h.wait(), exp)
+plan = next(iter(sess.runtime()._plans.values()))
+assert plan.cluster_ids == (4, 5, 6, 7)
+assert plan._stager.tree.root == 4
+assert plan.stats.tree_stages >= 1
+assert plan.stats.h2d_bytes < 4 * ops["data"].nbytes   # O(1), not O(n)
+sess.close()
+print("OK")
+""")
+
+
+def test_serve_tenant_elastic_lease(subproc):
+    """The serve tenant grows to the free fabric for a burst, shrinks to
+    its floor between bursts, and repeated bursts reuse the warm engine."""
+    subproc("""
+import jax, numpy as np
+from repro import models as M
+from repro.api import FabricScheduler
+from repro.serve import ServeConfig, ServeTenant
+
+cfg = M.reduced(M.get("smollm-360m"))
+sched = FabricScheduler(jax.devices())
+params = jax.device_get(M.init_params(jax.random.key(0), cfg))
+tenant = ServeTenant(sched, cfg, params, ServeConfig(batch=4, max_len=24),
+                     floor=1, burst=4)
+assert tenant.lease.n == 1 and len(sched.free_clusters()) == 3
+prompts = np.random.default_rng(0).integers(
+    0, cfg.vocab_size, (4, 8)).astype(np.int32)
+out1 = tenant.generate(prompts, 6)
+assert tenant.lease.n == 1                      # shrunk back after burst
+assert len(sched.free_clusters()) == 3
+out2 = tenant.generate(prompts, 6)              # warm burst, same window
+np.testing.assert_array_equal(out1, out2)       # greedy => deterministic
+assert len(tenant._engines) == 1                # the burst window, reused
+# an offload tenant takes the head-room while serve is idle; the next
+# burst is capped to what is free (here: the floor itself)
+lease = sched.request("offload", n=3)
+assert lease.clusters == (1, 2, 3)
+out3 = tenant.generate(prompts, 6)
+assert out3.shape == out1.shape
+assert tenant.lease.n == 1
+assert len(tenant._engines) == 2                # + the floor-window engine
+lease.release()
+tenant.close()
+assert len(sched.free_clusters()) == 4
+print("OK")
+""", devices=4, x64=False, timeout=900)
