@@ -1,0 +1,108 @@
+"""Fault-recovery contract — deterministic, part of the CI subset.
+
+Three claims of the ISSUE-6 fault-tolerance substrate (`repro.core.
+faults` + the session's reliable submit path), pinned numerically:
+
+* **bit-identical recovery** — under the default :class:`RetryPolicy`,
+  every recoverable fault scenario (transient lost arrival, straggler
+  past the deadline, dead cluster inside the selection) returns results
+  bit-equal to the fault-free run.  The suite asserts this itself, so a
+  recovery regression fails the run even before ``--check`` compares
+  rows.
+
+* **recovery overhead** — the extra virtual cycles each scenario costs
+  over the fault-free baseline, recorded per scenario together with the
+  exact escalation counters (deadline trips, retries, probes, backups).
+  The timeline is model arithmetic on the injector's deterministic
+  schedule — no wallclock, so the rows are exact-compare stable.
+
+* **recovery model** — :func:`predict_recovery`'s closed form predicts
+  the measured overhead within the paper's §6 accuracy bar; the
+  ``model_error`` rows feed the harness's hard <15 % check.
+
+Needs the 8-device XLA host platform (the bench-smoke XLA_FLAGS);
+everything else is deterministic model arithmetic.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core import jobs
+from repro.core.faults import (
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
+    predict_recovery,
+)
+from repro.core.policy import OffloadPolicy, RetryPolicy
+from repro.core.session import Session
+
+Row = Tuple[str, float, str]
+
+#: selection size for every scenario (half the 8-cluster test substrate)
+N = 4
+
+RETRY = RetryPolicy()        # the default ladder: 3 attempts, 3x deadline
+
+#: one scenario per recoverable fault class, each a single-fault plan so
+#: the per-scenario overhead row isolates that class's recovery cost
+SCENARIOS = (
+    ("lost_arrival",
+     FaultPlan([FaultSpec(FaultKind.LOST_ARRIVAL, at_dispatch=0, count=1)])),
+    ("straggle",
+     FaultPlan([FaultSpec(FaultKind.STRAGGLE, at_dispatch=0, factor=10.0)])),
+    ("cluster_death",
+     FaultPlan([FaultSpec(FaultKind.CLUSTER_DEATH, at_dispatch=0,
+                          clusters=(1,))])),
+)
+
+
+def faults_suite() -> Tuple[List[Row], str]:
+    import numpy as np
+
+    job = jobs.make_axpy(512)
+    operands, _ = job.make_instance(0)
+    pol = OffloadPolicy(retry=RETRY)
+
+    # fault-free baseline: the reliable path's virtual timeline with no
+    # injector is exactly the §6 job estimate
+    clean = Session(policy=pol)
+    ref = np.asarray(clean.submit(job, dict(operands), n=N).wait())
+    base = clean.health().virtual_cycles
+    clean.close()
+
+    rows: List[Row] = [("faults/fault_free/cycles", base, "cycles")]
+    errs: List[float] = []
+    for name, plan in SCENARIOS:
+        sess = Session(policy=pol, faults=FaultInjector(plan))
+        out = np.asarray(sess.submit(job, dict(operands), n=N).wait())
+        h = sess.health()
+        sess.close()
+
+        bitexact = 1.0 if np.array_equal(out, ref) else 0.0
+        assert bitexact == 1.0, (
+            f"recovery under {name!r} is not bit-identical to the "
+            "fault-free run")
+        measured = h.virtual_cycles - base
+        predicted = predict_recovery(job, N, plan, RETRY)
+        err = abs(predicted - measured) / measured * 100.0
+        errs.append(err)
+        rows += [
+            (f"faults/{name}/overhead", measured, "cycles"),
+            (f"faults/{name}/predicted", predicted, "cycles"),
+            (f"faults/{name}/model_error", err, "percent"),
+            (f"faults/{name}/bitexact", bitexact, "count"),
+            (f"faults/{name}/deadline_trips", float(h.deadline_trips),
+             "count"),
+            (f"faults/{name}/retries", float(h.retries), "count"),
+            (f"faults/{name}/probes", float(h.probes), "count"),
+            (f"faults/{name}/backups", float(h.backups), "count"),
+        ]
+
+    derived = (
+        f"all {len(SCENARIOS)} recoverable scenarios bit-identical under "
+        f"the default RetryPolicy; recovery-model error max "
+        f"{max(errs):.2f}% (paper bar <15%)")
+    return rows, derived

@@ -29,7 +29,8 @@ puts, dispatches, bytes) must match exactly; cold-start rows
   compared row is printed so the drift is diagnosable from the CI log.
 
 CI wires a deterministic ``--only`` subset (fig07, fig12, staging,
-session) through this so benchmark bit-rot breaks the build.  The
+session, scheduler, faults) through this so benchmark bit-rot breaks
+the build.  The
 ``session`` suite (``benchmarks/session_bench.py``) pins the session
 API's estimate contract — every ``Session.estimate`` prediction within
 the 15 % bar — and the AUTO planner's decision signature.
@@ -60,10 +61,12 @@ SUITES = {
     "session": "session estimate contract + AUTO decision signature",
     "scheduler": "fabric scheduler: utilization, placement regret, "
                  "makespan model",
+    "faults": "fault recovery: bit-exact results, overhead + recovery "
+              "model error",
 }
 
 #: suites the CI bench-smoke gate runs (`make bench-smoke` / ci.yml)
-CI_SUITES = ("fig07", "fig12", "staging", "session", "scheduler")
+CI_SUITES = ("fig07", "fig12", "staging", "session", "scheduler", "faults")
 
 #: row-name fragments excluded from --check (compile-dominated, unbounded noise)
 CHECK_SKIP = ("/cold", "/error", "unix_time")
@@ -196,6 +199,7 @@ def main() -> None:
             ap.error(f"unknown suite(s) {', '.join(unknown)}; valid: "
                      f"{', '.join(SUITES)} (see --list)")
 
+    from benchmarks.faults_bench import faults_suite
     from benchmarks.kernel_bench import kernel_table
     from benchmarks.offload_wallclock import (
         offload_wallclock, serve_throughput, staging_wall, stream_wallclock,
@@ -214,6 +218,7 @@ def main() -> None:
     suites["staging_wall"] = staging_wall
     suites["session"] = session_suite
     suites["scheduler"] = scheduler_suite
+    suites["faults"] = faults_suite
     missing = sorted(set(suites) ^ set(SUITES))
     assert not missing, f"suite registry out of sync: {missing}"
     if keep is not None:

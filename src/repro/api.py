@@ -7,7 +7,11 @@ prediction contract (:func:`estimate` / :func:`predict_staging`,
 paper §6, error < 15 %), the serving engine, and the multi-tenant
 fabric scheduler (:class:`FabricScheduler` / :class:`ClusterLease` /
 :class:`ServeTenant` — sessions hold leases on cluster windows instead
-of the whole mesh; see the README's "Fabric scheduler" section).
+of the whole mesh; see the README's "Fabric scheduler" section), and the
+fault-tolerance substrate (:class:`FaultPlan` / :class:`FaultInjector` /
+:class:`RetryPolicy` — deterministic fault injection, model-driven
+deadlines, and the resubmit → backup-window → lease-failover escalation
+ladder; README "Fault tolerance").
 
 Quickstart::
 
@@ -31,11 +35,23 @@ API" section has the migration table.
 
 from repro.core.fabric import (
     ClusterLease,
+    FabricHealth,
     FabricScheduler,
     LeaseError,
     LeaseUnavailable,
     SchedulerPolicy,
     Tenant,
+)
+from repro.core.faults import (
+    CompletionTimeout,
+    FaultError,
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
+    SessionHealth,
+    deadline_cycles,
+    predict_recovery,
 )
 from repro.core.jobs import PAPER_JOBS, PaperJob, make_instances
 from repro.core.multicast import MulticastRequest
@@ -51,6 +67,7 @@ from repro.core.policy import (
     InfoDist,
     OffloadPolicy,
     Residency,
+    RetryPolicy,
     Staging,
     TenantKind,
 )
@@ -59,20 +76,30 @@ from repro.core.session import (
     Explain,
     PlanDecision,
     Planner,
+    ReliableHandle,
     Session,
     SessionHandle,
     estimate,
     predict_staging,
 )
+from repro.ft import BackupOffload, StepWatchdog, WatchdogConfig, elastic_restore
 from repro.serve import ServeConfig, ServeEngine, ServeTenant
 
 __all__ = [
     "AUTO",
+    "BackupOffload",
     "ClusterLease",
     "Completion",
+    "CompletionTimeout",
     "Estimate",
     "Explain",
+    "FabricHealth",
     "FabricScheduler",
+    "FaultError",
+    "FaultInjector",
+    "FaultKind",
+    "FaultPlan",
+    "FaultSpec",
     "InfoDist",
     "JobHandle",
     "LeaseError",
@@ -86,17 +113,25 @@ __all__ = [
     "PlanDecision",
     "PlanStats",
     "Planner",
+    "ReliableHandle",
     "Residency",
+    "RetryPolicy",
     "SchedulerPolicy",
     "ServeConfig",
     "ServeEngine",
     "ServeTenant",
     "Session",
     "SessionHandle",
+    "SessionHealth",
     "Staging",
+    "StepWatchdog",
     "Tenant",
     "TenantKind",
+    "WatchdogConfig",
+    "deadline_cycles",
+    "elastic_restore",
     "estimate",
     "make_instances",
+    "predict_recovery",
     "predict_staging",
 ]

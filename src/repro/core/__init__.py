@@ -12,11 +12,23 @@ from repro.core.broadcast import (
 from repro.core.completion import CompletionUnit
 from repro.core.fabric import (
     ClusterLease,
+    FabricHealth,
     FabricScheduler,
     LeaseError,
     LeaseUnavailable,
     SchedulerPolicy,
     Tenant,
+)
+from repro.core.faults import (
+    CompletionTimeout,
+    FaultError,
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
+    SessionHealth,
+    deadline_cycles,
+    predict_recovery,
 )
 from repro.core.jobs import PAPER_JOBS, PaperJob, make_instances, stack_instances
 from repro.core.model import (
@@ -52,6 +64,7 @@ from repro.core.policy import (
     InfoDist,
     OffloadPolicy,
     Residency,
+    RetryPolicy,
     Staging,
     TenantKind,
 )
@@ -60,6 +73,7 @@ from repro.core.session import (
     Explain,
     PlanDecision,
     Planner,
+    ReliableHandle,
     Session,
     SessionHandle,
     estimate,
@@ -87,20 +101,23 @@ from repro.core.simulator import (
 
 __all__ = [
     "AUTO", "AddressMap", "BroadcastTree", "ClusterLease", "Completion",
-    "CompletionUnit",
+    "CompletionTimeout", "CompletionUnit",
     "DEFAULT_PARAMS",
-    "DispatchPlan", "Estimate", "Explain", "FabricScheduler",
+    "DispatchPlan", "Estimate", "Explain", "FabricHealth", "FabricScheduler",
     "FabricSimResult",
+    "FaultError", "FaultInjector", "FaultKind", "FaultPlan", "FaultSpec",
     "FusedHandle", "InfoDist", "JobHandle", "JobSpec",
     "LeaseError", "LeaseUnavailable",
     "MulticastRequest", "OccamyParams", "OffloadConfig", "OffloadPolicy",
     "OffloadRuntime",
     "OffloadStream", "PlanDecision", "PlanStats", "Planner",
-    "PAPER_JOBS", "PaperJob", "Phase", "PhaseStats", "Residency",
+    "PAPER_JOBS", "PaperJob", "Phase", "PhaseStats", "ReliableHandle",
+    "Residency", "RetryPolicy",
     "SchedulerPolicy",
-    "Session", "SessionHandle", "SimResult",
+    "Session", "SessionHandle", "SessionHealth", "SimResult",
     "Staging", "StagingCostModel", "Tenant", "TenantKind",
     "TenantWorkload", "TreeStager",
+    "deadline_cycles", "predict_recovery",
     "fabric_makespan_model", "simulate_fabric",
     "atax_closed_form_paper", "axpy_closed_form", "count_collectives",
     "build_tree", "decode_cluster_selection", "decode_match",

@@ -147,6 +147,23 @@ class CompletionUnit:
                 return
             self._collected.add(cause)
 
+    def cancel(self, job_id: int) -> int:
+        """Abandon a stuck offload: reset the unit's registers without
+        firing the IPI, returning how many arrivals were still missing.
+
+        The fault-recovery path uses this after a deadline trip — the
+        register state (``outstanding()``) has already been read as the
+        failure signal, and the unit must be reusable for the resubmit.
+        A unit that is not tracking an offload cancels as a no-op (0).
+        """
+        regs = self._regs[job_id % len(self._regs)]
+        if regs.offload == 0:
+            return 0
+        missing = regs.offload - regs.arrivals
+        regs.offload = 0
+        regs.arrivals = 0
+        return missing
+
     def outstanding(self) -> Dict[int, int]:
         """job-id -> arrivals still missing, for every in-flight unit."""
         return {

@@ -40,6 +40,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import weakref
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import broadcast as bc
@@ -59,6 +60,21 @@ class LeaseError(RuntimeError):
 
 class LeaseUnavailable(LeaseError):
     """No placement satisfies the request right now (queueable)."""
+
+
+@dataclasses.dataclass
+class FabricHealth:
+    """Scheduler-side recovery counters (the fabric analogue of
+    :class:`repro.core.faults.SessionHealth`)."""
+
+    failed_clusters: int = 0     # clusters ever marked unhealthy
+    failovers: int = 0           # leases re-placed onto healthy windows
+    degradations: int = 0        # failovers that had to shrink the lease
+    lost_leases: int = 0         # leases with no healthy window at all
+    restaged_operands: int = 0   # resident operands re-staged on failover
+
+    def snapshot(self) -> "FabricHealth":
+        return dataclasses.replace(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,6 +241,10 @@ class FabricScheduler:
         self._tenants: Dict[str, Tenant] = {}
         self._pending: Deque[PendingLease] = collections.deque()
         self._next_id = itertools.count(1)
+        self._unhealthy: set = set()              # failed global cluster ids
+        self._health = FabricHealth()
+        # lease_id -> weakref to the bound Session (failover callback)
+        self._sessions: Dict[int, Any] = {}
 
     # -- introspection ------------------------------------------------------
 
@@ -238,7 +258,21 @@ class FabricScheduler:
 
     def free_clusters(self) -> Tuple[int, ...]:
         return tuple(c for c in range(self.num_clusters)
-                     if c not in self._owner)
+                     if c not in self._owner and c not in self._unhealthy)
+
+    def unhealthy_clusters(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._unhealthy))
+
+    def health(self) -> FabricHealth:
+        """A snapshot of the scheduler's recovery counters."""
+        return self._health.snapshot()
+
+    def current_lease(self, lease: ClusterLease) -> Optional[ClusterLease]:
+        """The scheduler's current grant for ``lease``'s id (the lease
+        object a failover or resize replaced it with), or ``None`` when
+        the lease is gone — holders refresh stale references through
+        this instead of keying scheduler calls on a dead object."""
+        return self._leases.get(lease.lease_id)
 
     def tenant(self, name: str) -> Optional[Tenant]:
         return self._tenants.get(name)
@@ -260,7 +294,8 @@ class FabricScheduler:
         runs: List[Tuple[int, int]] = []
         start = None
         for c in range(self.num_clusters + 1):
-            free = c < self.num_clusters and c not in self._owner
+            free = (c < self.num_clusters and c not in self._owner
+                    and c not in self._unhealthy)
             if free and start is None:
                 start = c
             elif not free and start is not None:
@@ -375,6 +410,11 @@ class FabricScheduler:
                 raise ValueError(
                     f"clusters {window} outside the "
                     f"{self.num_clusters}-cluster fabric")
+            sick = [c for c in window if c in self._unhealthy]
+            if sick:
+                raise LeaseUnavailable(
+                    f"clusters {sick} are marked unhealthy "
+                    f"(fail_clusters); request a different window")
             taken = [c for c in window if c in self._owner]
             if taken:
                 holders = sorted({self._leases[self._owner[c]].tenant
@@ -492,10 +532,10 @@ class FabricScheduler:
         right = tuple(range(old[-1] + 1, old[-1] + 1 + grow))
         left = tuple(range(old[0] - grow, old[0]))
         if all(0 <= c < self.num_clusters and c not in self._owner
-               for c in right):
+               and c not in self._unhealthy for c in right):
             window = old + right
         elif all(0 <= c < self.num_clusters and c not in self._owner
-                 for c in left):
+                 and c not in self._unhealthy for c in left):
             window = left + old
         else:
             # cannot extend in place: relocate (a fresh window scored by
@@ -520,7 +560,93 @@ class FabricScheduler:
         self._admit_pending()
         return replaced
 
+    # -- failure handling ---------------------------------------------------
+
+    def fail_clusters(self, clusters: Sequence[int]
+                      ) -> Tuple[ClusterLease, ...]:
+        """Mark clusters unhealthy and fail over every affected lease.
+
+        Unhealthy clusters leave the placement pool (free runs, resize
+        growth, explicit windows) until :meth:`restore_clusters`.  Each
+        lease that intersects the newly failed set is drained and
+        re-placed on a model-scored healthy window of equal size —
+        bound sessions are rebound in place and their resident operands
+        re-staged through the broadcast tree from the root host
+        snapshots.  When no equal-size healthy window exists the lease
+        *degrades*: the largest healthy power-of-two window that fits
+        (counted in :meth:`health`); with no healthy window at all the
+        lease is lost and its session closed.  Returns the replacement
+        leases.
+        """
+        bad = {int(c) for c in clusters}
+        out = [c for c in bad if not (0 <= c < self.num_clusters)]
+        if out:
+            raise ValueError(
+                f"clusters {sorted(out)} outside the "
+                f"{self.num_clusters}-cluster fabric")
+        newly = bad - self._unhealthy
+        self._unhealthy |= newly
+        self._health.failed_clusters += len(newly)
+        affected = [lease for lease in self.leases
+                    if set(lease.clusters) & newly]
+        replaced = []
+        for lease in affected:
+            new_lease = self._failover(lease)
+            if new_lease is not None:
+                replaced.append(new_lease)
+        self._admit_pending()
+        return tuple(replaced)
+
+    def restore_clusters(self, clusters: Sequence[int]) -> None:
+        """Return repaired clusters to the placement pool (queued
+        requests may be granted immediately)."""
+        self._unhealthy -= {int(c) for c in clusters}
+        self._admit_pending()
+
+    def _failover(self, lease: ClusterLease) -> Optional[ClusterLease]:
+        """Re-place one lease off the unhealthy set, shrinking if needed."""
+        for c in lease.clusters:
+            self._owner.pop(c, None)
+        n = lease.n
+        window = self._place(n)
+        degraded = False
+        while window is None and n > 1:
+            # graceful degradation: the largest pow2 healthy window left
+            n //= 2
+            window = self._place(n)
+            degraded = window is not None
+        sess = self._bound_session(lease.lease_id)
+        if window is None:
+            del self._leases[lease.lease_id]
+            self._sessions.pop(lease.lease_id, None)
+            self._health.lost_leases += 1
+            if sess is not None:
+                sess._rebind(None)
+            return None
+        replaced = dataclasses.replace(lease, clusters=window)
+        for c in window:
+            self._owner[c] = replaced.lease_id
+        self._leases[replaced.lease_id] = replaced
+        self._health.failovers += 1
+        if degraded:
+            self._health.degradations += 1
+        if sess is not None:
+            self._health.restaged_operands += sess._rebind(replaced)
+        return replaced
+
     # -- session glue -------------------------------------------------------
+
+    def _bind_session(self, lease: ClusterLease, session: Any) -> None:
+        """Register the session owning ``lease`` for failover callbacks
+        (held weakly — an abandoned session never pins the fabric)."""
+        self._sessions[lease.lease_id] = weakref.ref(session)
+
+    def _unbind_session(self, lease: ClusterLease) -> None:
+        self._sessions.pop(lease.lease_id, None)
+
+    def _bound_session(self, lease_id: int) -> Any:
+        ref = self._sessions.get(lease_id)
+        return ref() if ref is not None else None
 
     def session(self, tenant: Union[str, Tenant],
                 n: Optional[int] = None, *,

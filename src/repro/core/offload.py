@@ -125,6 +125,7 @@ from repro.core.completion import (
     central_counter_arrivals,
     completion_unit_arrivals,
 )
+from repro.core.faults import CompletionTimeout, FaultInjector
 from repro.core.jobs import PaperJob, stack_instances
 from repro.core.policy import (
     Completion, InfoDist, Residency, Staging, coerce_enum, warn_legacy,
@@ -249,8 +250,10 @@ class JobHandle:
     n_clusters: int
     dispatched_at: float
     runtime: "OffloadRuntime"
+    cluster_ids: Tuple[int, ...] = ()
     _data: Any = None
     _done: bool = False
+    _fault: Optional[CompletionTimeout] = None
 
     def wait(self) -> Any:
         """Block until complete; feeds the completion unit and returns data.
@@ -260,10 +263,29 @@ class JobHandle:
         :meth:`CompletionUnit.collect` — handles may be waited on in any
         order relative to dispatch (the number of *outstanding* jobs is
         bounded by the runtime's ``n_units``, as in the paper's fig. 6).
+
+        Under fault injection, a dispatch whose arrivals were dropped
+        raises :class:`~repro.core.faults.CompletionTimeout` instead:
+        the partial arrivals are fed to the unit first (so
+        ``outstanding()`` shows the missing count — the actionable
+        signal) and the stuck register is cancelled so the unit is
+        immediately reusable for the resubmit.
         """
+        if self._fault is not None:
+            raise self._fault
         if self._done:
             return self._data
         data, arrivals = jax.device_get((self.result, self.arrivals))
+        inj = self.runtime.fault_injector
+        lost = (inj.lost_arrivals(self.runtime, self.job_id)
+                if inj is not None else 0)
+        if lost:
+            self.runtime.unit.arrive(self.job_id, int(arrivals) - lost)
+            missing = self.runtime.unit.cancel(self.job_id)
+            self.result = self.arrivals = None
+            self._fault = CompletionTimeout(self.job_id, missing,
+                                            self.cluster_ids)
+            raise self._fault
         self.runtime.unit.arrive(self.job_id, int(arrivals))
         self.runtime.unit.collect(self.job_id)
         self._data, self._done = data, True
@@ -540,6 +562,7 @@ class OffloadRuntime:
         config: OffloadConfig = OffloadConfig.extended(),
         n_units: int = 4,
         cluster_ids: Optional[Sequence[int]] = None,
+        fault_injector: Optional[FaultInjector] = None,
     ):
         self.all_devices = list(devices if devices is not None else jax.devices())
         # the fabric window this runtime owns: global cluster ids, one per
@@ -557,6 +580,7 @@ class OffloadRuntime:
         if len(set(self.cluster_ids)) != len(self.cluster_ids):
             raise ValueError(f"duplicate cluster ids in {self.cluster_ids}")
         self.config = config
+        self.fault_injector = fault_injector
         self.unit = CompletionUnit(n_units=n_units)
         self._job_counter = 0
         self._compiled: Dict[Tuple, Any] = {}
@@ -787,7 +811,7 @@ class OffloadRuntime:
         handle = self._launch(plan, args_dev, op_dev)
         return FusedHandle(handle.job_id, handle.result, handle.arrivals,
                            plan.n_clusters, handle.dispatched_at, self,
-                           batch=B)
+                           plan.cluster_ids, batch=B)
 
     def _launch(self, plan: DispatchPlan, args_dev: Any,
                 op_dev: Dict[str, Any],
@@ -798,11 +822,16 @@ class OffloadRuntime:
         job_id = self._job_counter
         self._job_counter += 1
         self.unit.program(plan.n_clusters, job_id)
+        if self.fault_injector is not None:
+            # fault-injection hook: resolves this dispatch's scheduled
+            # effect (dropped arrivals / virtual delay) deterministically
+            self.fault_injector.on_dispatch(self, job_id, plan.cluster_ids,
+                                            plan.job.spec)
         result, arrivals = plan.fn(
             args_dev, *(op_dev[name] for name, _, _ in plan.op_meta))
         plan._after_dispatch(consumed_resident=consumed_resident)
         return JobHandle(job_id, result, arrivals, plan.n_clusters,
-                         time.monotonic(), self)
+                         time.monotonic(), self, plan.cluster_ids)
 
     def run(self, job: PaperJob, seed: int = 0, **sel) -> Tuple[Any, Any]:
         """Convenience: build an instance, offload it, return (got, expected)."""

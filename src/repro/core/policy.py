@@ -117,6 +117,47 @@ def warn_legacy(old: str, new: str) -> None:
 
 
 @dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Model-driven deadlines and the recovery escalation ladder.
+
+    The deadline of attempt ``a`` is the §6 ``Session.estimate`` job
+    total × ``deadline_factor`` × ``backoff^a`` — *virtual cycles*, not
+    wallclock, so recovery is deterministic (this replaces
+    ``StepWatchdog``'s latency-history cold-start heuristic for the
+    offload path).  On a trip the session escalates:
+
+      1. resubmit in the lease (transient faults — lost arrivals,
+         stalls — succeed here),
+      2. a disjoint backup window inside the lease, address-mask
+         encoded (``backup=True``; also the speculative race partner
+         for stragglers that complete but blow the deadline),
+      3. full lease failover through ``FabricScheduler.fail_clusters``
+         (``failover=True``), shrinking gracefully when no equal-size
+         healthy window exists.
+
+    ``max_attempts`` bounds the trips before :class:`~repro.core.
+    faults.FaultError`.
+    """
+
+    max_attempts: int = 3
+    deadline_factor: float = 3.0
+    backoff: float = 2.0
+    backup: bool = True
+    failover: bool = True
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.deadline_factor <= 1.0:
+            raise ValueError(
+                f"deadline_factor must be > 1 (a deadline at or below the "
+                f"prediction trips every job), got {self.deadline_factor}")
+        if self.backoff < 1.0:
+            raise ValueError(f"backoff must be >= 1, got {self.backoff}")
+
+
+@dataclasses.dataclass(frozen=True)
 class OffloadPolicy:
     """How a session submit is dispatched — every mode knob in one place.
 
@@ -137,6 +178,10 @@ class OffloadPolicy:
       completion-unit copies at submit time.
     * ``depth`` — staging buffer slots for the pipelined upload overlap.
     * ``donate_operands`` — XLA buffer donation, as in ``OffloadConfig``.
+    * ``retry`` — a :class:`RetryPolicy` routes submits through the
+      fault-tolerant path (model-driven deadlines + the escalation
+      ladder); ``None`` (default) keeps the fast path with no deadline
+      checks.
     """
 
     staging: Optional[Staging] = None
@@ -147,6 +192,7 @@ class OffloadPolicy:
     window: Optional[int] = None
     depth: int = 2
     donate_operands: bool = False
+    retry: Optional[RetryPolicy] = None
 
     def __post_init__(self):
         coerce = object.__setattr__
@@ -159,6 +205,9 @@ class OffloadPolicy:
                coerce_enum(InfoDist, self.info_dist, "info_dist"))
         coerce(self, "completion",
                coerce_enum(Completion, self.completion, "completion"))
+        if self.retry is not None and not isinstance(self.retry, RetryPolicy):
+            raise TypeError(
+                f"retry must be a RetryPolicy, got {type(self.retry).__name__}")
         for field, lo in (("fuse", 1), ("window", 1), ("depth", 1)):
             v = getattr(self, field)
             if v is not None and (not isinstance(v, int) or v < lo):

@@ -55,14 +55,18 @@ from repro.core import model as amodel
 from repro.core import multicast as mc
 from repro.core import simulator
 from repro.core.fabric import ClusterLease
-from repro.core.jobs import PaperJob, stack_instances
+from repro.core.faults import (
+    PROBE_N, CompletionTimeout, FaultError, FaultInjector, SessionHealth,
+    deadline_cycles,
+)
+from repro.core.jobs import PaperJob, make_axpy, stack_instances
 from repro.core.offload import (
     FusedHandle, OffloadConfig, OffloadRuntime, PlanStats,
 )
 from repro.core.params import DEFAULT_PARAMS, OccamyParams
 from repro.core.phases import Phase
 from repro.core.policy import (
-    AUTO, InfoDist, OffloadPolicy, Residency, Staging,
+    AUTO, InfoDist, OffloadPolicy, Residency, RetryPolicy, Staging,
 )
 from repro.core.stream import OffloadStream
 
@@ -486,6 +490,67 @@ class SessionHandle:
                        wall_s=self._wall)
 
 
+class ReliableHandle:
+    """In-flight *reliable* submit — the fault-tolerant path's handle.
+
+    A policy with ``retry=RetryPolicy(...)`` routes ``Session.submit``
+    here: every job instance runs under a model-driven deadline
+    (:func:`repro.core.faults.deadline_cycles` over the §6 estimate) and,
+    on a trip, the session walks the escalation ladder — resubmit in
+    place, disjoint backup window, full lease failover.  ``wait()``
+    executes the ladder synchronously per instance and returns results in
+    submit order; recoverable faults leave the results bit-identical to a
+    fault-free run.
+    """
+
+    def __init__(self, session: "Session", job: PaperJob, est: Estimate,
+                 instances: List[Mapping[str, np.ndarray]],
+                 args_list: Optional[List[np.ndarray]],
+                 pol: OffloadPolicy, retry: RetryPolicy,
+                 multi: bool, sel: Sequence[int]):
+        self.session = session
+        self.job = job
+        self._estimate = est
+        self._instances = instances
+        self._args: List[Optional[np.ndarray]] = (
+            list(args_list) if args_list is not None
+            else [None] * len(instances))
+        self._pol = pol
+        self._retry = retry
+        self._multi = multi
+        self._sel = list(sel)
+        self._result: Any = None
+        self._done = False
+
+    @property
+    def jobs(self) -> int:
+        return len(self._instances)
+
+    @property
+    def decision(self) -> PlanDecision:
+        return self._estimate.decision
+
+    def wait(self) -> Any:
+        if self._done:
+            return self._result
+        out: List[Any] = []
+        for inst, args in zip(self._instances, self._args):
+            data, sel = self.session._run_reliable(
+                self.job, inst, args, self._pol, self._retry,
+                list(self._sel))
+            # job k+1 starts from the post-recovery selection: a failover
+            # or degradation carries forward instead of re-tripping
+            self._sel = list(sel)
+            out.append(data)
+        self._result = out if self._multi else out[0]
+        self._done = True
+        return self._result
+
+    def explain(self) -> Explain:
+        return Explain(estimate=self._estimate, stats=self.session.stats,
+                       jobs=self.jobs, wall_s=None)
+
+
 class Session:
     """The unified offload front door: typed policies, one submit path.
 
@@ -503,7 +568,8 @@ class Session:
                  n_units: int = 4,
                  params: OccamyParams = DEFAULT_PARAMS,
                  planner: Optional[Planner] = None,
-                 runtime: Optional[OffloadRuntime] = None):
+                 runtime: Optional[OffloadRuntime] = None,
+                 faults: Optional[FaultInjector] = None):
         if runtime is not None and devices is not None:
             raise ValueError("give devices or a runtime, not both")
         if lease is not None and (devices is not None or runtime is not None):
@@ -515,6 +581,8 @@ class Session:
         self.n_units = n_units
         self.params = params
         self.planner = planner or Planner(params)
+        self._faults = faults
+        self._health = SessionHealth()
         self._runtimes: Dict[OffloadConfig, OffloadRuntime] = {}
         self._closed = False
         if lease is not None:
@@ -524,10 +592,16 @@ class Session:
             self._devices = list(lease.devices)
             self._cluster_ids: Tuple[int, ...] = tuple(lease.clusters)
             self._lease: Optional[ClusterLease] = lease
+            if lease.scheduler is not None:
+                # register for failover callbacks: fail_clusters() rebinds
+                # this session onto the replacement window in place
+                lease.scheduler._bind_session(lease, self)
         elif runtime is not None:
             self._devices = list(runtime.all_devices)
             self._cluster_ids = tuple(runtime.cluster_ids)
             self._lease = None
+            if faults is not None:
+                runtime.fault_injector = faults
             self._runtimes[self._cfg_key(runtime.config)] = runtime
         else:
             if devices is None:
@@ -573,11 +647,12 @@ class Session:
             return
         self.drain()
         self._closed = True
-        if (self._lease is not None and self._lease.scheduler is not None
-                and self._lease.active):
-            # already-released (or externally resized) leases are left
-            # alone — close() is cleanup, not a second release
-            self._lease.release()
+        if self._lease is not None and self._lease.scheduler is not None:
+            self._lease.scheduler._unbind_session(self._lease)
+            if self._lease.active:
+                # already-released (or externally resized) leases are left
+                # alone — close() is cleanup, not a second release
+                self._lease.release()
 
     def _check_open(self, op: str) -> None:
         if self._closed:
@@ -599,12 +674,16 @@ class Session:
         cfg = OffloadConfig(info_dist=policy.info_dist,
                             completion=policy.completion,
                             donate_operands=policy.donate_operands)
+        return self._runtime_from_cfg(cfg)
+
+    def _runtime_from_cfg(self, cfg: OffloadConfig) -> OffloadRuntime:
         key = self._cfg_key(cfg)
         rt = self._runtimes.get(key)
         if rt is None:
             rt = OffloadRuntime(self._devices, config=cfg,
                                 n_units=self.n_units,
-                                cluster_ids=self._cluster_ids)
+                                cluster_ids=self._cluster_ids,
+                                fault_injector=self._faults)
             self._runtimes[key] = rt
         return rt
 
@@ -674,6 +753,9 @@ class Session:
         """
         self._check_open("submit")
         pol = self.policy if policy is None else policy
+        if pol.retry is not None:
+            return self._submit_reliable(job, operands, pol, job_args,
+                                         n, request, clusters)
         resident = isinstance(operands, Residency)
         if resident:
             if operands is not Residency.RESIDENT:
@@ -771,6 +853,284 @@ class Session:
         return SessionHandle(self, job, est, parts, multi or
                              (resident and decision.fuse > 1), plans, t0)
 
+    # -- the fault-tolerant path --------------------------------------------
+
+    def _submit_reliable(self, job: PaperJob, operands, pol: OffloadPolicy,
+                         job_args, n, request, clusters) -> "ReliableHandle":
+        """Route a retrying submit: deadline-checked synchronous singles.
+
+        The reliable path snapshots host operands so any attempt can be
+        replayed bit-identically — ``Residency.RESIDENT`` (device-only
+        buffers) therefore cannot ride it."""
+        retry = pol.retry
+        assert retry is not None
+        if isinstance(operands, (Residency, str)):
+            raise ValueError(
+                "retry needs host operand snapshots to replay an attempt; "
+                "submit operand dicts, not Residency.RESIDENT")
+        multi = isinstance(operands, (list, tuple))
+        if multi and not operands:
+            raise ValueError("empty instance list")
+        instances = (
+            [dict(o) for o in operands] if multi else [dict(operands)])
+        args_list = _args_list(job_args, len(instances))
+        # reliable dispatch is synchronous singles: a deadline race needs
+        # one completion per attempt, not a fused/pipelined batch
+        rpol = pol.pinned(
+            fuse=1, window=1,
+            staging=pol.staging if pol.staging is not None
+            else Staging.DIRECT)
+        ids, _ = self._selection_ids(rpol, n, request, clusters)
+        est = self._reliable_est(job, ids, rpol)
+        return ReliableHandle(self, job, est, instances, args_list,
+                              rpol, retry, multi, ids)
+
+    def _reliable_est(self, job: PaperJob, sel_glob: Sequence[int],
+                      rpol: OffloadPolicy) -> Estimate:
+        key = ("reliable", job.spec.name, tuple(sel_glob), rpol)
+        est = self._est_cache.get(key)
+        if est is None:
+            est = estimate(job, clusters=list(sel_glob), batch=1,
+                           policy=rpol, n_units=self.n_units,
+                           params=self.params, planner=self.planner)
+            self._est_cache[key] = est
+        return est
+
+    def _rel_ids(self, globs: Sequence[int]) -> List[int]:
+        """Global fabric ids -> window-relative indices (the selection
+        vocabulary ``OffloadRuntime.select_clusters`` takes)."""
+        idx = {c: i for i, c in enumerate(self._cluster_ids)}
+        return [idx[c] for c in globs]
+
+    def _run_reliable(self, job: PaperJob, inst: Mapping[str, np.ndarray],
+                      args: Optional[np.ndarray], rpol: OffloadPolicy,
+                      retry: RetryPolicy, sel_glob: List[int]
+                      ) -> Tuple[Any, List[int]]:
+        """One job instance through the deadline/escalation machinery.
+
+        Returns ``(result, selection)`` — the selection the job finally
+        ran on, so the caller can carry a failover forward.  All deadline
+        arithmetic is in the §6 model's virtual-cycle domain: recovery is
+        deterministic, never wallclock-dependent."""
+        known_dead: set = set()
+        attempt = 0
+        while True:
+            # re-fetched every attempt: a failover swaps the runtimes out
+            rt = self._runtime_for(rpol)
+            base = self._reliable_est(job, sel_glob, rpol).job_cycles
+            deadline = deadline_cycles(base, retry, attempt)
+            try:
+                handle = rt.offload(job, dict(inst), job_args=args,
+                                    clusters=self._rel_ids(sel_glob))
+                data = handle.wait()
+            except CompletionTimeout as exc:
+                self._health.deadline_trips += 1
+                self._health.virtual_cycles += deadline
+                attempt += 1
+                if attempt >= retry.max_attempts:
+                    self._health.jobs_failed += 1
+                    raise FaultError(
+                        f"job {job.spec.name!r} failed after {attempt} "
+                        f"attempts on clusters {tuple(sel_glob)} "
+                        f"({exc.missing} arrivals missing)") from exc
+                known_dead |= self._probe_dead(rt, retry, exc)
+                sel_glob = self._next_selection(job, rpol, retry, sel_glob,
+                                                known_dead)
+                self._health.retries += 1
+                continue
+            # completed — race the deadline in the virtual-cycle domain: a
+            # straggling primary that finishes past its deadline loses to
+            # a backup launched *at* the deadline on a disjoint window
+            inj = self._faults
+            delay = (inj.delay_cycles(rt, handle.job_id)
+                     if inj is not None else 0.0)
+            finish = base + delay
+            if finish > deadline and retry.backup:
+                self._health.deadline_trips += 1
+                avoid = set(known_dead)
+                if inj is not None:
+                    avoid |= set(inj.dead_clusters)
+                backup_sel = self._disjoint_window(sel_glob, avoid)
+                if backup_sel is not None:
+                    try:
+                        bh = rt.offload(job, dict(inst), job_args=args,
+                                        clusters=self._rel_ids(backup_sel))
+                        bdata = bh.wait()
+                        bdelay = (inj.delay_cycles(rt, bh.job_id)
+                                  if inj is not None else 0.0)
+                        # the backup launches when the primary's deadline
+                        # expires; first completion wins
+                        b_finish = deadline + base + bdelay
+                        self._health.backups += 1
+                        if b_finish < finish:
+                            data, finish = bdata, b_finish
+                    except CompletionTimeout:
+                        pass   # primary already has the result in hand
+            self._health.virtual_cycles += finish
+            self._health.jobs_ok += 1
+            return data, sel_glob
+
+    def _probe_dead(self, rt: OffloadRuntime, retry: RetryPolicy,
+                    exc: CompletionTimeout) -> set:
+        """Localize dead clusters after a trip.
+
+        The completion unit already says *how many* arrivals are missing
+        (``exc.missing`` — the §4.3 machinery as a failure detector);
+        bisection probes with a small AXPY narrow down *which* clusters.
+        A probe group whose miss count equals its size is entirely dead —
+        the shortcut that makes localization O(log n) per dead cluster.
+        Without an injector there is nothing to probe against: the whole
+        selection is conservatively suspect."""
+        inj = self._faults
+        if inj is None:
+            return set(exc.clusters)
+        probe_job = make_axpy(PROBE_N)
+        dead: set = set()
+        stack: List[List[int]] = [sorted(exc.clusters)]
+        while stack:
+            grp = stack.pop()
+            if not grp:
+                continue
+            self._health.probes += 1
+            p_est = amodel.predict_total_v2(probe_job.spec, len(grp),
+                                            self.params)
+            ops, _ = probe_job.make_instance(0)
+            try:
+                rt.offload(probe_job, ops,
+                           clusters=self._rel_ids(grp)).wait()
+                self._health.virtual_cycles += p_est
+            except CompletionTimeout as pe:
+                # a failed probe costs its own deadline, not its estimate
+                self._health.virtual_cycles += retry.deadline_factor * p_est
+                if pe.missing >= len(grp) or len(grp) == 1:
+                    dead.update(grp)
+                else:
+                    mid = len(grp) // 2
+                    stack.append(grp[:mid])
+                    stack.append(grp[mid:])
+        return dead
+
+    def _disjoint_window(self, sel_glob: Sequence[int],
+                         avoid: set) -> Optional[List[int]]:
+        """An equal-size healthy window in the lease, disjoint from the
+        current selection (rung 2 of the ladder; the selection is later
+        greedily covered by address-mask subcube requests)."""
+        want = len(sel_glob)
+        used = set(sel_glob) | set(avoid)
+        pool = [c for c in self._cluster_ids if c not in used]
+        return pool[:want] if len(pool) >= want else None
+
+    def _next_selection(self, job: PaperJob, rpol: OffloadPolicy,
+                        retry: RetryPolicy, sel_glob: List[int],
+                        known_dead: set) -> List[int]:
+        """The escalation ladder: where does the next attempt run?
+
+        1. no dead cluster in the selection → transient fault (lost
+           arrival, stall): resubmit in place;
+        2. a disjoint equal-size healthy window inside the lease → the
+           backup window;
+        3. ``FabricScheduler.fail_clusters`` → full lease failover (the
+           scheduler rebinds this session onto a healthy window, restaging
+           resident operands); without a scheduler, degrade to the largest
+           power-of-two healthy prefix of the window.
+        """
+        if not (set(sel_glob) & known_dead):
+            return sel_glob                      # rung 1: resubmit in place
+        if retry.backup:
+            backup = self._disjoint_window(sel_glob, known_dead)
+            if backup is not None:
+                self._health.backups += 1        # rung 2: backup window
+                return backup
+        sched = self._lease.scheduler if self._lease is not None else None
+        if retry.failover and sched is not None:  # rung 3: lease failover
+            dead_here = sorted(known_dead & set(self._cluster_ids))
+            if dead_here:
+                sched.fail_clusters(dead_here)   # -> self._rebind(...)
+            if self._closed or self._lease is None:
+                self._health.jobs_failed += 1
+                raise FaultError(
+                    f"lease lost: no healthy window to fail over to "
+                    f"(dead clusters {sorted(known_dead)})")
+            healthy = [c for c in self._cluster_ids if c not in known_dead]
+        else:
+            # no scheduler (or failover disabled): degrade in the window
+            healthy = [c for c in self._cluster_ids if c not in known_dead]
+        n_ok = min(len(sel_glob), len(healthy))
+        if n_ok == 0:
+            self._health.jobs_failed += 1
+            raise FaultError(
+                f"no healthy clusters left in window {self._cluster_ids} "
+                f"(dead: {sorted(known_dead)})")
+        # power-of-two selections keep every job's shard split valid
+        n_sel = 1 << (n_ok.bit_length() - 1)
+        if n_sel < len(sel_glob):
+            self._health.degraded += 1
+        return healthy[:n_sel]
+
+    def _rebind(self, new_lease: Optional[ClusterLease]) -> int:
+        """Failover callback from ``FabricScheduler.fail_clusters``: move
+        this session onto ``new_lease``'s window (``None`` = no healthy
+        window existed; the session closes).  Resident operands whose
+        host-side snapshots the plans hold are re-staged through the same
+        strategy they originally rode (a tree-staged weight re-crosses
+        the host link once, to the new root).  Returns the number of
+        operands restaged."""
+        self._drain_tolerant()
+        old_ids = list(self._cluster_ids)
+        if new_lease is None:
+            self._closed = True
+            self._lease = None
+            return 0
+        # snapshot resident state before dropping the old-window runtimes
+        snapshots = []
+        for rt in self._runtimes.values():
+            for plan in rt._plans.values():
+                src = dict(plan._resident_src)
+                if len(src) != len(plan.op_meta):
+                    continue    # nothing (or only partial) residency
+                rel = [old_ids.index(c) for c in plan.cluster_ids]
+                snapshots.append((plan.job, src, rel, plan._staged_via,
+                                  plan.fuse, plan.args_shape, rt.config))
+        self._lease = new_lease
+        self._devices = list(new_lease.devices)
+        self._cluster_ids = tuple(new_lease.clusters)
+        self._runtimes = {}
+        self._streams = {}
+        self._fused_inflight = collections.deque()
+        self._est_cache = {}
+        restaged = 0
+        for job, src, rel, via, fuse, args_shape, cfg in snapshots:
+            if max(rel) >= len(self._cluster_ids):
+                continue        # shrunken window: this placement is gone
+            rt = self._runtime_from_cfg(cfg)
+            plan = rt.plan(job, operands=src, clusters=rel,
+                           args_shape=args_shape, fuse=fuse)
+            plan.stage(src, _caller_owned=False, via=via)
+            restaged += len(src)
+        self._health.failovers += 1
+        self._health.restages += restaged
+        return restaged
+
+    def _drain_tolerant(self) -> None:
+        """Drain in-flight work, absorbing completion trips (a failover
+        must not abandon the other streams' handles mid-deque)."""
+        while self._fused_inflight:
+            try:
+                self._fused_inflight.popleft().wait()
+            except CompletionTimeout:
+                self._health.jobs_failed += 1
+        for stream in self._streams.values():
+            while stream._inflight:
+                try:
+                    stream._inflight.popleft().wait()
+                    stream.stats["drained"] += 1
+                except CompletionTimeout:
+                    self._health.jobs_failed += 1
+
+    def health(self) -> SessionHealth:
+        """Fault/recovery counters of this session (a snapshot)."""
+        return self._health.snapshot()
+
     def stage(self, job: PaperJob,
               operands: Union[Mapping[str, np.ndarray],
                               Sequence[Mapping[str, np.ndarray]]],
@@ -848,11 +1208,12 @@ class Session:
     # -- bookkeeping --------------------------------------------------------
 
     def drain(self) -> None:
-        """Block until every in-flight submit has completed."""
-        while self._fused_inflight:
-            self._fused_inflight.popleft().wait()
-        for stream in self._streams.values():
-            stream.drain()
+        """Block until every in-flight submit has completed.
+
+        Completion trips (injected faults) are absorbed into
+        ``health().jobs_failed`` rather than raised: drain is cleanup,
+        and a raise mid-deque would abandon the remaining handles."""
+        self._drain_tolerant()
 
     @property
     def stats(self) -> PlanStats:

@@ -1,6 +1,13 @@
-"""Fault tolerance: watchdog, straggler mitigation, elastic rescale."""
+"""Fault tolerance: watchdog, straggler mitigation, elastic rescale.
 
-from repro.ft.straggler import BackupOffload, StepWatchdog
+The deterministic fault-injection substrate and the session-level
+escalation ladder live in :mod:`repro.core.faults` (re-exported from
+``repro.api``); this package carries the wallclock-domain companions —
+the step watchdog, speculative backup offload, and elastic restore.
+"""
+
+from repro.ft.straggler import BackupOffload, StepWatchdog, WatchdogConfig
 from repro.ft.elastic import elastic_restore
 
-__all__ = ["BackupOffload", "StepWatchdog", "elastic_restore"]
+__all__ = ["BackupOffload", "StepWatchdog", "WatchdogConfig",
+           "elastic_restore"]

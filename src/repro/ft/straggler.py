@@ -38,15 +38,31 @@ class WatchdogConfig:
 
 
 class StepWatchdog:
-    """Rolling-latency deadline tracker for dispatched jobs/steps."""
+    """Rolling-latency deadline tracker for dispatched jobs/steps.
 
-    def __init__(self, cfg: WatchdogConfig = WatchdogConfig()):
-        self.cfg = cfg
+    ``estimate`` seeds the cold-start deadline from a model prediction
+    (e.g. a §6 ``Session.estimate`` converted to this watchdog's time
+    unit): before any latency history exists the deadline is
+    ``deadline_factor × estimate``.  Without a seed the cold deadline is
+    unbounded — lateness is undecidable with neither a model nor a
+    history, so nothing trips (the old ``min_deadline_s * 10`` magic
+    guessed instead).
+    """
+
+    def __init__(self, cfg: Optional[WatchdogConfig] = None,
+                 estimate: Optional[float] = None):
+        # a fresh config per instance: a shared default instance would
+        # alias cfg mutations across every watchdog in the process
+        self.cfg = cfg if cfg is not None else WatchdogConfig()
+        self.estimate = estimate
         self._lat: List[float] = []
 
     def deadline(self) -> float:
         if not self._lat:
-            return self.cfg.min_deadline_s * 10
+            if self.estimate is not None:
+                return max(self.cfg.min_deadline_s,
+                           self.cfg.deadline_factor * self.estimate)
+            return float("inf")
         p50 = float(np.median(self._lat))
         return max(self.cfg.min_deadline_s, self.cfg.deadline_factor * p50)
 

@@ -734,7 +734,17 @@ class ServeTenant:
             self._engines[key] = eng
         return eng
 
+    def _sync(self) -> None:
+        # a fabric failover (FabricScheduler.fail_clusters) replaces the
+        # lease object in place — same id, healthy window — leaving this
+        # tenant's reference stale; refresh it before keying any
+        # scheduler call (or engine cache) on the window
+        cur = self.scheduler.current_lease(self.lease)
+        if cur is not None and cur is not self.lease:
+            self.lease = cur
+
     def _grow(self) -> None:
+        self._sync()
         # the global free count is an upper bound; the free space may be
         # fragmented into windows smaller than it, so walk the target
         # down until a contiguous grow (or relocation) fits — a burst
@@ -749,6 +759,7 @@ class ServeTenant:
                 target -= 1
 
     def _shrink(self) -> None:
+        self._sync()
         if self.lease.n != self.floor:
             self.lease = self.scheduler.resize(self.lease, self.floor)
 
@@ -794,5 +805,6 @@ class ServeTenant:
 
     def close(self) -> None:
         """Release the floor lease (the tenant leaves the fabric)."""
+        self._sync()
         if self.lease.active:
             self.lease.release()

@@ -32,13 +32,18 @@ def _params(fn):
 
 
 EXPORTS = (
-    "AUTO", "ClusterLease", "Completion", "Estimate", "Explain",
-    "FabricScheduler", "InfoDist", "JobHandle", "LeaseError",
+    "AUTO", "BackupOffload", "ClusterLease", "Completion",
+    "CompletionTimeout", "Estimate", "Explain", "FabricHealth",
+    "FabricScheduler", "FaultError", "FaultInjector", "FaultKind",
+    "FaultPlan", "FaultSpec", "InfoDist", "JobHandle", "LeaseError",
     "LeaseUnavailable", "MulticastRequest", "OffloadConfig", "OffloadPolicy",
     "OffloadRuntime", "PAPER_JOBS", "PaperJob", "PlanDecision", "PlanStats",
-    "Planner", "Residency", "SchedulerPolicy", "ServeConfig", "ServeEngine",
-    "ServeTenant", "Session", "SessionHandle", "Staging", "Tenant",
-    "TenantKind", "estimate", "make_instances", "predict_staging",
+    "Planner", "ReliableHandle", "Residency", "RetryPolicy",
+    "SchedulerPolicy", "ServeConfig", "ServeEngine", "ServeTenant",
+    "Session", "SessionHandle", "SessionHealth", "Staging", "StepWatchdog",
+    "Tenant", "TenantKind", "WatchdogConfig", "deadline_cycles",
+    "elastic_restore", "estimate", "make_instances", "predict_recovery",
+    "predict_staging",
 )
 
 ENUMS = {
@@ -47,19 +52,24 @@ ENUMS = {
     "InfoDist": ("MULTICAST", "P2P_CHAIN"),
     "Completion": ("UNIT", "CENTRAL_COUNTER"),
     "TenantKind": ("OFFLOAD", "SERVE"),
+    "FaultKind": ("CLUSTER_DEATH", "STRAGGLE", "HOST_LINK_STALL",
+                  "LOST_ARRIVAL"),
 }
 
 SNAPSHOT = {
     "OffloadPolicy": ("staging=", "residency=", "info_dist=", "completion=",
-                      "fuse=", "window=", "depth=", "donate_operands="),
+                      "fuse=", "window=", "depth=", "donate_operands=",
+                      "retry="),
     "OffloadPolicy.pinned": ("**fields",),
+    "RetryPolicy": ("max_attempts=", "deadline_factor=", "backoff=",
+                    "backup=", "failover="),
     "OffloadConfig": ("info_dist=", "completion=", "donate_operands=",
                       "staging="),
     "Planner": ("params=", "max_fuse=", "tree_min_bytes="),
     "Planner.decide": ("job", "clusters", "batch", "policy", "n_units",
                        "operands="),
     "Session": ("devices=", "lease=", "policy=", "n_units=", "params=",
-                "planner=", "runtime="),
+                "planner=", "runtime=", "faults="),
     "Session.submit": ("job", "operands", "policy=", "job_args=", "n=",
                        "request=", "clusters="),
     "Session.estimate": ("job", "batch=", "policy=", "n=", "clusters=",
@@ -68,8 +78,13 @@ SNAPSHOT = {
                       "clusters="),
     "Session.drain": (),
     "Session.close": (),
+    "Session.health": (),
     "Session.runtime": ("policy=",),
     "FabricScheduler": ("devices=", "num_clusters=", "params=", "policy="),
+    "FabricScheduler.fail_clusters": ("clusters",),
+    "FabricScheduler.restore_clusters": ("clusters",),
+    "FabricScheduler.health": (),
+    "FabricScheduler.current_lease": ("lease",),
     "FabricScheduler.request": ("tenant", "n=", "clusters=", "job=",
                                 "batch=", "queue="),
     "FabricScheduler.release": ("lease",),
@@ -85,6 +100,17 @@ SNAPSHOT = {
     "ServeTenant.generate": ("prompts", "n_new", "extra_inputs="),
     "SessionHandle.wait": (),
     "SessionHandle.explain": (),
+    "ReliableHandle.wait": (),
+    "ReliableHandle.explain": (),
+    "FaultSpec": ("kind", "at_dispatch=", "clusters=", "factor=", "count="),
+    "FaultPlan": ("faults=",),
+    "FaultPlan.random": ("seed", "n_faults=", "num_clusters=",
+                         "max_dispatch=", "kinds=", "max_factor="),
+    "FaultInjector": ("plan", "params="),
+    "StepWatchdog": ("cfg=", "estimate="),
+    "deadline_cycles": ("base_cycles", "retry", "attempt="),
+    "predict_recovery": ("job", "n", "plan", "retry", "params=",
+                         "probe_n="),
     "estimate": ("job", "n=", "clusters=", "batch=", "policy=", "n_units=",
                  "params=", "operands=", "planner="),
     "predict_staging": ("nbytes", "clusters", "staging", "params="),

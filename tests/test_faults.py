@@ -1,0 +1,418 @@
+"""Fault-tolerant fabric (ISSUE-6): deterministic injection, model-driven
+deadlines, the escalation ladder, and lease failover.
+
+In-process tests cover the pure machinery (plans, policies, watchdog,
+completion-unit cancel, scheduler bookkeeping in model-only mode); the
+subprocess tests drive real 8-device dispatch through injected faults and
+assert the headline contract — recoverable faults leave job results
+bit-identical to a fault-free run.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.completion import CompletionUnit
+from repro.core.fabric import FabricScheduler, LeaseUnavailable
+from repro.core.faults import (
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
+    deadline_cycles,
+    predict_recovery,
+    probe_bound,
+)
+from repro.core.policy import OffloadPolicy, RetryPolicy
+from repro.ft.straggler import StepWatchdog, WatchdogConfig
+
+
+# -- fault plans -------------------------------------------------------------
+
+
+def test_fault_plan_seeded_deterministic():
+    a = FaultPlan.random(7, n_faults=4, num_clusters=8, max_dispatch=6)
+    b = FaultPlan.random(7, n_faults=4, num_clusters=8, max_dispatch=6)
+    assert a.faults == b.faults
+    c = FaultPlan.random(8, n_faults=4, num_clusters=8, max_dispatch=6)
+    assert a.faults != c.faults
+    assert len(a) == 4
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="non-empty cluster set"):
+        FaultSpec(FaultKind.CLUSTER_DEATH)
+    with pytest.raises(ValueError, match="factor > 0"):
+        FaultSpec(FaultKind.STRAGGLE)
+    with pytest.raises(ValueError, match="count >= 1"):
+        FaultSpec(FaultKind.LOST_ARRIVAL, count=0)
+    with pytest.raises(ValueError, match="at_dispatch"):
+        FaultSpec(FaultKind.LOST_ARRIVAL, at_dispatch=-1)
+    # string kinds coerce (the enum is string-valued, like every policy enum)
+    assert FaultSpec("straggle", factor=2.0).kind is FaultKind.STRAGGLE
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="deadline_factor"):
+        RetryPolicy(deadline_factor=1.0)
+    with pytest.raises(ValueError, match="backoff"):
+        RetryPolicy(backoff=0.5)
+    with pytest.raises(TypeError, match="RetryPolicy"):
+        OffloadPolicy(retry="retry")       # type: ignore[arg-type]
+    assert OffloadPolicy(retry=RetryPolicy()).retry.max_attempts == 3
+
+
+def test_deadline_formula():
+    retry = RetryPolicy(deadline_factor=3.0, backoff=2.0)
+    for attempt in range(4):
+        assert deadline_cycles(1000.0, retry, attempt) == (
+            3000.0 * 2.0 ** attempt)
+
+
+def test_probe_bound_shape():
+    assert probe_bound(8, 0) == 1                   # transient: one clean probe
+    assert probe_bound(8, 1) == 1 + 2 * 3           # one dead in 8: 3 levels
+    assert probe_bound(8, 2) > probe_bound(8, 1)
+    assert probe_bound(1, 1) == 1 + 2 * 1 * 1
+
+
+def test_predict_recovery_positive_and_monotone():
+    from repro.core import jobs
+    job = jobs.make_axpy(512)
+    retry = RetryPolicy()
+    lost = FaultPlan([FaultSpec(FaultKind.LOST_ARRIVAL)])
+    death = FaultPlan([FaultSpec(FaultKind.CLUSTER_DEATH, clusters=(1, 2))])
+    r_lost = predict_recovery(job, 4, lost, retry)
+    r_death = predict_recovery(job, 4, death, retry)
+    assert 0 < r_lost < r_death                     # localization costs more
+    assert predict_recovery(job, 4, FaultPlan([]), retry) == 0.0
+
+
+# -- the watchdog satellite (shared-default bug + model-seeded cold start) ---
+
+
+def test_watchdog_config_not_shared_across_instances():
+    w1, w2 = StepWatchdog(), StepWatchdog()
+    assert w1.cfg is not w2.cfg
+    w1.cfg.deadline_factor = 99.0                   # the old aliasing bug
+    assert w2.cfg.deadline_factor == 3.0
+
+
+def test_watchdog_cold_start_seeded_by_estimate():
+    cold = StepWatchdog()
+    assert cold.deadline() == float("inf")          # undecidable: never trips
+    assert not cold.is_late(started_at=0.0, now=1e9)
+    seeded = StepWatchdog(WatchdogConfig(min_deadline_s=0.01), estimate=0.2)
+    assert seeded.deadline() == pytest.approx(3.0 * 0.2)
+    assert seeded.is_late(started_at=0.0, now=0.7)
+    # history takes over once observed (the rolling-p50 warm path)
+    for lat in (0.05, 0.06, 0.07):
+        seeded.observe(lat)
+    assert seeded.deadline() == pytest.approx(3.0 * 0.06)
+
+
+# -- completion-unit cancel (the failure detector's reset) -------------------
+
+
+def test_completion_unit_cancel_resets_registers():
+    unit = CompletionUnit(n_units=2)
+    unit.program(4, job_id=0)
+    unit.arrive(0, 3)
+    assert unit.outstanding() == {0: 1}
+    assert unit.cancel(0) == 1                      # returns the missing count
+    assert unit.outstanding() == {}
+    unit.program(4, job_id=2)                       # the copy is reusable
+    unit.arrive(2, 4)
+    unit.collect(2)
+    assert unit.cancel(2) == 0                      # no-op on a clean register
+
+
+# -- injector schedule (no devices needed) -----------------------------------
+
+
+def test_injector_effects_keyed_by_dispatch_index():
+    from repro.core import jobs
+    spec = jobs.make_axpy(512).spec
+    plan = FaultPlan([
+        FaultSpec(FaultKind.LOST_ARRIVAL, at_dispatch=1, count=2),
+        FaultSpec(FaultKind.CLUSTER_DEATH, at_dispatch=2, clusters=(5,)),
+    ])
+    inj = FaultInjector(plan)
+    rt = object()
+    inj.on_dispatch(rt, 0, (0, 1, 2, 3), spec)      # dispatch 0: clean
+    assert inj.lost_arrivals(rt, 0) == 0
+    inj.on_dispatch(rt, 1, (0, 1, 2, 3), spec)      # dispatch 1: 2 lost
+    assert inj.lost_arrivals(rt, 1) == 2
+    inj.on_dispatch(rt, 2, (4, 5, 6, 7), spec)      # dispatch 2: 5 dies
+    assert inj.dead_clusters == frozenset({5})
+    assert inj.lost_arrivals(rt, 2) == 1
+    inj.on_dispatch(rt, 3, (4, 5), spec)            # death is persistent
+    assert inj.lost_arrivals(rt, 3) == 1
+    inj.revive([5])
+    inj.on_dispatch(rt, 4, (4, 5), spec)
+    assert inj.lost_arrivals(rt, 4) == 0
+    assert inj.dispatch_index == 5
+    assert inj.injected["lost_arrival"] == 1
+    assert inj.injected["cluster_death"] == 1
+
+
+# -- scheduler bookkeeping (model-only fabric) -------------------------------
+
+
+def test_fail_clusters_quarantines_and_fails_over():
+    sched = FabricScheduler(num_clusters=8)
+    lease = sched.request("t", clusters=[0, 1, 2, 3])
+    replaced = sched.fail_clusters([1])
+    assert len(replaced) == 1 and replaced[0].lease_id == lease.lease_id
+    assert replaced[0].clusters == (4, 5, 6, 7)     # equal-size healthy window
+    assert sched.current_lease(lease) is replaced[0]
+    assert sched.unhealthy_clusters() == (1,)
+    assert 1 not in sched.free_clusters()
+    with pytest.raises(LeaseUnavailable, match="unhealthy"):
+        sched.request("u", clusters=[1])
+    h = sched.health()
+    assert h.failed_clusters == 1 and h.failovers == 1
+    assert h.degradations == 0 and h.lost_leases == 0
+    # repeated failure of the same cluster is idempotent
+    sched.fail_clusters([1])
+    assert sched.health().failed_clusters == 1
+    sched.restore_clusters([1])
+    assert sched.unhealthy_clusters() == ()
+    assert 1 in sched.free_clusters()
+
+
+def test_failover_degrades_when_no_equal_window():
+    sched = FabricScheduler(num_clusters=8)
+    lease = sched.request("t", n=4)                 # [0-3]
+    sched.request("other", clusters=[4, 5])         # fragment the free space
+    replaced = sched.fail_clusters([0])
+    assert replaced[0].n == 2                       # largest pow2 that fits
+    h = sched.health()
+    assert h.failovers == 1 and h.degradations == 1
+    assert lease.lease_id == replaced[0].lease_id
+
+
+def test_failover_loses_lease_when_fabric_exhausted():
+    sched = FabricScheduler(num_clusters=2)
+    lease = sched.request("t", n=2)
+    replaced = sched.fail_clusters([0, 1])
+    assert replaced == ()
+    assert sched.current_lease(lease) is None
+    h = sched.health()
+    assert h.lost_leases == 1 and h.failovers == 0
+
+
+def test_reliable_path_rejects_resident_operands():
+    from repro.core import jobs
+    from repro.core.policy import Residency
+    from repro.core.session import Session
+    sess = Session(devices=["d0"])
+    with pytest.raises(ValueError, match="host operand snapshots"):
+        sess.submit(jobs.make_axpy(512), Residency.RESIDENT,
+                    policy=OffloadPolicy(retry=RetryPolicy()))
+
+
+# -- real dispatch under injection (8 simulated clusters) --------------------
+
+
+def test_recovery_bit_identical_transient_and_backup(subproc):
+    """Lost arrival -> in-place resubmit; straggle -> backup race; cluster
+    death -> probe + disjoint backup window.  All three recover to the
+    bit-exact fault-free result and count correctly in health()."""
+    subproc("""
+import numpy as np
+from repro.api import (FaultInjector, FaultKind, FaultPlan, FaultSpec,
+                       OffloadPolicy, RetryPolicy, Session)
+from repro.core import jobs
+
+job = jobs.make_axpy(512)
+ops, _ = job.make_instance(0)
+ref = np.asarray(Session().submit(job, dict(ops), n=4).wait())
+
+# transient lost arrival: rung 1 (resubmit in place)
+inj = FaultInjector(FaultPlan([FaultSpec(FaultKind.LOST_ARRIVAL,
+                                         at_dispatch=0, count=1)]))
+sess = Session(policy=OffloadPolicy(retry=RetryPolicy()), faults=inj)
+out = np.asarray(sess.submit(job, dict(ops), n=4).wait())
+np.testing.assert_array_equal(out, ref)
+h = sess.health()
+assert (h.deadline_trips, h.retries, h.probes, h.backups) == (1, 1, 1, 0), h
+assert h.jobs_ok == 1 and h.jobs_failed == 0
+sess.close()
+
+# straggler past the deadline: speculative backup race, backup wins,
+# results bit-equal either way
+inj = FaultInjector(FaultPlan([FaultSpec(FaultKind.STRAGGLE,
+                                         at_dispatch=0, factor=10.0)]))
+sess = Session(policy=OffloadPolicy(retry=RetryPolicy()), faults=inj)
+out = np.asarray(sess.submit(job, dict(ops), n=4).wait())
+np.testing.assert_array_equal(out, ref)
+h = sess.health()
+assert h.backups == 1 and h.deadline_trips == 1 and h.retries == 0, h
+sess.close()
+
+# a mild straggler inside the deadline: no trip, no backup
+inj = FaultInjector(FaultPlan([FaultSpec(FaultKind.STRAGGLE,
+                                         at_dispatch=0, factor=0.5)]))
+sess = Session(policy=OffloadPolicy(retry=RetryPolicy()), faults=inj)
+out = np.asarray(sess.submit(job, dict(ops), n=4).wait())
+np.testing.assert_array_equal(out, ref)
+assert sess.health().deadline_trips == 0
+sess.close()
+
+# cluster death: rung 2 (bisection probes, disjoint backup window)
+inj = FaultInjector(FaultPlan([FaultSpec(FaultKind.CLUSTER_DEATH,
+                                         at_dispatch=0, clusters=(1,))]))
+sess = Session(policy=OffloadPolicy(retry=RetryPolicy()), faults=inj)
+out = np.asarray(sess.submit(job, dict(ops), n=4).wait())
+np.testing.assert_array_equal(out, ref)
+h = sess.health()
+assert h.probes >= 1 and h.backups == 1 and h.jobs_ok == 1, h
+sess.close()
+
+# exhaustion: every cluster dead -> FaultError after max_attempts
+inj = FaultInjector(FaultPlan([FaultSpec(FaultKind.CLUSTER_DEATH,
+                                         at_dispatch=0,
+                                         clusters=tuple(range(8)))]))
+sess = Session(policy=OffloadPolicy(retry=RetryPolicy(max_attempts=2,
+                                                      failover=False)),
+               faults=inj)
+from repro.api import FaultError
+try:
+    sess.submit(job, dict(ops), n=4).wait()
+    raise SystemExit("expected FaultError")
+except FaultError:
+    pass
+assert sess.health().jobs_failed >= 1
+print("OK")
+""")
+
+
+def test_lease_failover_and_degradation_bit_identical(subproc):
+    """Scheduler-mediated failover: a dead lease window is re-placed on
+    healthy clusters (resident operands restaged), shrinking gracefully
+    when no equal window exists — results stay bit-identical."""
+    subproc("""
+import jax, numpy as np
+from repro.api import (FabricScheduler, FaultInjector, FaultKind, FaultPlan,
+                       FaultSpec, OffloadPolicy, Residency, RetryPolicy,
+                       Session, Tenant)
+from repro.core import jobs
+
+job = jobs.make_axpy(512)
+ops, _ = job.make_instance(0)
+ref4 = np.asarray(Session().submit(job, dict(ops), n=4).wait())
+
+# whole lease dies -> rung 3: fail_clusters re-places it on [4-7]
+sched = FabricScheduler(jax.devices())
+lease = sched.request(Tenant("t"), clusters=[0, 1, 2, 3])
+inj = FaultInjector(FaultPlan([FaultSpec(FaultKind.CLUSTER_DEATH,
+                                         at_dispatch=0,
+                                         clusters=(0, 1, 2, 3))]))
+sess = Session(lease=lease, policy=OffloadPolicy(retry=RetryPolicy()),
+               faults=inj)
+out = np.asarray(sess.submit(job, dict(ops), n=4).wait())
+np.testing.assert_array_equal(out, ref4)
+assert tuple(sess.lease.clusters) == (4, 5, 6, 7)
+assert sess.health().failovers == 1
+fh = sched.health()
+assert fh.failovers == 1 and fh.failed_clusters == 4
+sess.close()
+assert sched.leases == ()                     # close released the new lease
+
+# degradation: whole-mesh lease, one cluster dies, no equal-size healthy
+# window exists -> shrink to 4 (AXPY shards on out axis: bit-equal to n=4)
+sched = FabricScheduler(jax.devices())
+lease = sched.request(Tenant("t"), n=8)
+inj = FaultInjector(FaultPlan([FaultSpec(FaultKind.CLUSTER_DEATH,
+                                         at_dispatch=0, clusters=(2,))]))
+sess = Session(lease=lease,
+               policy=OffloadPolicy(retry=RetryPolicy(backup=False)),
+               faults=inj)
+out = np.asarray(sess.submit(job, dict(ops), n=8).wait())
+np.testing.assert_array_equal(out, ref4)
+assert sess.health().degraded == 1
+assert sched.health().degradations == 1
+assert len(sess.lease.clusters) == 4
+sess.close()
+
+# resident operands survive a failover: restaged from host snapshots
+sched = FabricScheduler(jax.devices())
+lease = sched.request(Tenant("t"), clusters=[0, 1, 2, 3])
+inj = FaultInjector(FaultPlan([FaultSpec(FaultKind.CLUSTER_DEATH,
+                                         at_dispatch=99, clusters=(1,))]))
+sess = Session(lease=lease, faults=inj)
+sess.stage(job, dict(ops), n=4)
+r1 = np.asarray(sess.submit(job, Residency.RESIDENT, n=4).wait())
+sched.fail_clusters([1])
+assert sched.health().restaged_operands >= len(ops)
+assert tuple(sess.lease.clusters) == (4, 5, 6, 7)
+r2 = np.asarray(sess.submit(job, Residency.RESIDENT, n=4).wait())
+np.testing.assert_array_equal(r2, r1)
+sess.close()
+print("OK")
+""")
+
+
+def test_backup_offload_delay_hook_race(subproc):
+    """Wallclock-domain companion: BackupOffload with a deterministic
+    delay hook reissues to the disjoint backup set, and the winner's
+    result is bit-equal to the healthy primary's."""
+    subproc("""
+import jax, numpy as np
+from repro.api import OffloadRuntime, StepWatchdog, WatchdogConfig
+from repro.core import jobs
+from repro.ft import BackupOffload
+
+job = jobs.make_axpy(512)
+rt = OffloadRuntime(jax.devices())
+wd = StepWatchdog(WatchdogConfig(min_deadline_s=0.01), estimate=0.02)
+slow = BackupOffload(rt, wd, delay_hook=lambda h: 10.0)
+r_backup, _ = slow.run(job, 3, primary=[0, 1], backup=[2, 3])
+assert slow.reissues == 1
+fast = BackupOffload(OffloadRuntime(jax.devices()),
+                     StepWatchdog(estimate=1e9), delay_hook=lambda h: 0.0)
+r_primary, expected = fast.run(job, 3, primary=[0, 1], backup=[2, 3])
+assert fast.reissues == 0
+np.testing.assert_array_equal(np.asarray(r_backup), np.asarray(r_primary))
+np.testing.assert_allclose(np.asarray(r_primary), expected, rtol=1e-12)
+try:
+    fast.run(job, 3, primary=[0, 1], backup=[1, 2])
+    raise SystemExit("expected ValueError")
+except ValueError:
+    pass
+print("OK")
+""")
+
+
+def test_serve_tenant_survives_failover_greedy_identical(subproc):
+    """A serve tenant whose lease window fails keeps serving: the
+    scheduler rebinds the lease, the tenant refreshes its stale
+    descriptor, and greedy decode output is identical on the new window."""
+    subproc("""
+import jax, numpy as np
+from repro import models as M
+from repro.api import FabricScheduler
+from repro.serve import ServeConfig, ServeTenant
+
+cfg = M.reduced(M.get("smollm-360m"))
+sched = FabricScheduler(jax.devices())
+params = jax.device_get(M.init_params(jax.random.key(0), cfg))
+tenant = ServeTenant(sched, cfg, params, ServeConfig(batch=4, max_len=24),
+                     floor=2, burst=2)
+assert tenant.lease.clusters == (0, 1)
+prompts = np.random.default_rng(0).integers(
+    0, cfg.vocab_size, (4, 8)).astype(np.int32)
+out1 = tenant.generate(prompts, 5)
+sched.fail_clusters([0])                      # the floor window dies
+out2 = tenant.generate(prompts, 5)            # stale lease refreshed
+np.testing.assert_array_equal(out1, out2)     # greedy => deterministic
+assert tenant.lease.clusters != (0, 1)
+assert sched.health().failovers == 1
+tenant.close()
+assert sched.leases == ()
+print("OK")
+""", x64=False, timeout=900)
