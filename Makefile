@@ -10,25 +10,26 @@ test:
 	$(PYTHON) -m pytest -x -q
 
 # Static types on the public surface (repro.api, the policy vocabulary,
-# the fabric scheduler, and the fault-tolerance substrate).  Skips
-# gracefully where mypy is not installed (it is in requirements-dev.txt,
-# so CI always runs it).
+# the fabric scheduler, the session submit path, the serve engine, and
+# the fault-tolerance substrate).  Skips gracefully where mypy is not
+# installed (it is in requirements-dev.txt, so CI always runs it).
 typecheck:
 	@if $(PYTHON) -c "import mypy" 2>/dev/null; then \
 		$(PYTHON) -m mypy --config-file mypy.ini \
 			src/repro/api.py src/repro/core/policy.py src/repro/core/fabric.py \
-			src/repro/core/faults.py src/repro/ft/; \
+			src/repro/core/faults.py src/repro/core/session.py \
+			src/repro/serve/engine.py src/repro/ft/; \
 	else \
 		echo "mypy not installed; skipping typecheck"; \
 	fi
 
 bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-		$(PYTHON) -m benchmarks.run --only fig07,fig12,staging,session,scheduler,faults --check BENCH_offload.json
+		$(PYTHON) -m benchmarks.run --only fig07,fig12,staging,session,scheduler,faults,preempt --check BENCH_offload.json
 
 # The tracked dispatch-overhead trajectory (writes BENCH_offload.json).
 bench-offload:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PYTHON) -m benchmarks.run \
-			--only offload,stream,serve_stream,staging,staging_wall,session,scheduler,faults,fig07,fig09,fig12 \
+			--only offload,stream,serve_stream,staging,staging_wall,session,scheduler,faults,preempt,fig07,fig09,fig12 \
 			--json BENCH_offload.json

@@ -1,0 +1,407 @@
+"""Preemption & overload contract — deterministic, part of the CI subset.
+
+Three claims of the PR-7 overload-robust fabric (`repro.core.fabric`
+revocable leases + SLO admission + graceful degradation), pinned
+numerically:
+
+* **zero lost jobs under churn** — a seeded serve×offload arrival trace
+  (decode bursts holding an elastic lease + offload tenant arrivals of
+  mixed sizes, weights, priorities, and SLOs) replayed through a real
+  ``preemption="priority"`` scheduler ends with every arrival accounted:
+  granted (immediately, by backfill, or resumed after a preemption) or
+  shed with a typed :class:`Overloaded` — never silently dropped.  The
+  suite asserts the invariant itself; the ladder counters (preemptions,
+  migrations, floor shrinks, degraded grants, sheds) are exact-compare
+  rows.
+
+* **p99 / utilization under preemption** — the discrete-event fabric
+  model (`simulate_fabric` + :class:`PreemptionEvent`) replays the
+  scheduler's own ladder decisions on a serve + batch + priority-burst
+  scenario: the burst tenant's completion improves over non-preemptive
+  FIFO sharing by >= the speedup bar while fabric utilization stays
+  >= the utilization bar of FIFO's, and the serve tenant's p99
+  inter-token latency stays <= the p99 bar times its quiet (no-churn)
+  baseline.  The closed-form `fabric_makespan_model` predicts both the
+  churn and the FIFO makespan within the paper's §6 bar (the
+  ``model_error`` rows feed the harness's hard <15 % check).
+
+* **bit-identical preemption** — on the 8-device XLA host platform, a
+  session whose lease is preempted mid-stream (in-flight window drained
+  under the model deadline, resident operands snapshotted, lease
+  re-placed, operands restaged through the broadcast tree) returns
+  results bit-equal to the unpreempted run — including with a composed
+  :class:`FaultPlan` injecting faults across the preemption.
+
+Needs the 8-device XLA host platform (the bench-smoke XLA_FLAGS) for the
+bit-exactness scenario; everything else is deterministic model
+arithmetic.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from typing import List, Tuple
+
+from repro.core import jobs, simulator
+from repro.core.fabric import (
+    ClusterLease,
+    FabricScheduler,
+    Overloaded,
+    SchedulerPolicy,
+    Tenant,
+)
+from repro.core.policy import TenantKind
+from repro.core.simulator import (
+    PreemptionEvent,
+    TenantWorkload,
+    fabric_makespan_model,
+    simulate_fabric,
+)
+
+Row = Tuple[str, float, str]
+
+#: acceptance bars (ISSUE-7): asserted by the suite itself
+BURST_SPEEDUP_BAR = 1.2     # priority burst completes >= this much earlier
+UTILIZATION_BAR = 0.85      # churn keeps >= this fraction of FIFO utilization
+P99_BAR = 2.0               # serve p99 token latency <= bar x quiet baseline
+
+
+# ---------------------------------------------------------------------------
+# Claim 1: trace-driven churn replay — zero lost jobs.
+# ---------------------------------------------------------------------------
+
+CHURN_ARRIVALS = 40
+CHURN_SEED = 7
+
+
+def _churn_rows() -> Tuple[List[Row], dict]:
+    rng = random.Random(CHURN_SEED)
+    sched = FabricScheduler(
+        num_clusters=32,
+        policy=SchedulerPolicy(preemption="priority", max_queue_depth=4,
+                               aging_grants=4))
+    decode = jobs.make_matmul(16, 16, 16)
+    serve = sched.request(Tenant("serve", kind=TenantKind.SERVE, weight=4.0,
+                                 priority=2), n=16, job=decode, batch=64)
+    sched.register_elastic(serve, floor=8)
+
+    offload_job = jobs.make_covariance(32, 64)
+    # priority arrivals ask for the full 16-wide window with a job whose
+    # makespan really needs it (8-wide is ~1.2x) — degradation cannot
+    # satisfy them, so the preempt rung fires on a loaded fabric
+    priority_job = jobs.make_covariance(128, 256)
+    granted = shed = 0
+    live: List[List] = []        # [lease, steps-to-hold]
+    queued: List = []            # PendingLease objects we are polling
+    for t in range(CHURN_ARRIVALS):
+        # departures: expire holds; a preempted lease (not current) stays
+        # until its re-placement lands, then releases
+        for entry in list(live):
+            entry[1] -= 1
+            if entry[1] > 0:
+                continue
+            cur = sched.current_lease(entry[0])
+            if cur is None:
+                continue         # revoked, awaiting re-place — retry later
+            sched.release(cur)
+            live.remove(entry)
+        for pend in list(queued):
+            if pend.ready:
+                granted += 1
+                queued.remove(pend)
+                live.append([pend.lease, rng.randint(2, 6)])
+        prio = rng.choice([0, 0, 0, 1])
+        ten = Tenant(f"o{t}", weight=float(rng.choice([1, 1, 2])),
+                     priority=prio,
+                     slo=(150_000.0 if rng.random() < 0.25 else None))
+        n = 16 if prio else rng.choice([2, 4, 8])
+        try:
+            res = sched.request(ten, n=n,
+                                job=priority_job if prio else offload_job,
+                                batch=4, queue=True)
+        except Overloaded as e:
+            assert e.retry_after_cycles >= 0.0
+            shed += 1
+            continue
+        if isinstance(res, ClusterLease):
+            granted += 1
+            live.append([res, rng.randint(2, 6)])
+        else:
+            queued.append(res)
+
+    # drain: release what remains; freed capacity grants the queue and
+    # re-places preempted leases until everything is accounted
+    for _ in range(10 * CHURN_ARRIVALS):
+        if not live and not queued:
+            break
+        for entry in list(live):
+            cur = sched.current_lease(entry[0])
+            if cur is not None:
+                sched.release(cur)
+                live.remove(entry)
+        for pend in list(queued):
+            if pend.ready:
+                granted += 1
+                queued.remove(pend)
+                live.append([pend.lease, 0])
+    assert not live and not queued, (
+        f"churn drain left work behind: {len(live)} live, "
+        f"{len(queued)} queued")
+    h = sched.health()
+    assert granted + shed == CHURN_ARRIVALS, (
+        f"lost jobs: {granted} granted + {shed} shed != "
+        f"{CHURN_ARRIVALS} arrivals")
+    assert shed == h.overloaded, "sheds must all be typed Overloaded"
+    assert not sched.pending, "drained fabric still has queued requests"
+    assert sched.leases == (sched.current_lease(serve),), (
+        "only the serve lease should survive the drain")
+    rows: List[Row] = [
+        ("preempt/churn/arrivals", float(CHURN_ARRIVALS), "count"),
+        ("preempt/churn/granted", float(granted), "count"),
+        ("preempt/churn/shed_overloaded", float(shed), "count"),
+        ("preempt/churn/preemptions", float(h.preemptions), "count"),
+        ("preempt/churn/migrations", float(h.migrations), "count"),
+        ("preempt/churn/floor_shrinks", float(h.floor_shrinks), "count"),
+        ("preempt/churn/degraded_grants", float(h.degraded_grants), "count"),
+    ]
+    return rows, {"granted": granted, "shed": shed,
+                  "preemptions": h.preemptions}
+
+
+# ---------------------------------------------------------------------------
+# Claim 2: p99 / utilization under a scheduler-driven preemption timeline.
+# ---------------------------------------------------------------------------
+
+SERVE_STEPS = 64       # decode steps (token latencies)
+BATCH_JOBS = 16
+BURST_JOBS = 12
+
+
+def _p99(latencies: List[float]) -> float:
+    ordered = sorted(latencies)
+    return ordered[min(len(ordered) - 1,
+                       max(0, math.ceil(0.99 * len(ordered)) - 1))]
+
+
+def _token_latencies(completions: List[float], arrival: float) -> List[float]:
+    out = []
+    prev = arrival
+    for c in completions:
+        out.append(c - prev)
+        prev = c
+    return out
+
+
+def _timing_rows() -> Tuple[List[Row], dict]:
+    decode = jobs.make_matmul(16, 16, 16)
+    batch_job = jobs.make_atax(256, 256)         # heavy enough that FIFO
+                                                 # sharing really hurts
+    burst_job = jobs.make_covariance(128, 256)   # needs the full 16-wide
+                                                 # window (8-wide is ~1.2x)
+
+    # drive the real ladder: serve holds an elastic 16 with floor 8, a
+    # low-priority batch tenant owns the other 16, and a priority burst
+    # arrives asking for 16 — compaction finds nothing, the serve lease
+    # shrinks to its floor, degrading cannot reach model-equal makespan,
+    # so the batch lease is revoked and re-queued
+    sched = FabricScheduler(
+        num_clusters=32, policy=SchedulerPolicy(preemption="priority"))
+    serve = sched.request(Tenant("serve", kind=TenantKind.SERVE, weight=4.0,
+                                 priority=2), n=16, job=decode,
+                          batch=SERVE_STEPS)
+    sched.register_elastic(serve, floor=8)
+    victim = sched.request(Tenant("batch", priority=0), n=16, job=batch_job,
+                           batch=BATCH_JOBS)
+    burst = sched.request(Tenant("burst", priority=1, weight=2.0), n=16,
+                          job=burst_job, batch=BURST_JOBS)
+    h = sched.health()
+    assert h.preemptions == 1, "the ladder should revoke the batch lease"
+    assert h.floor_shrinks == 0 and sched.current_lease(serve).n == 8, (
+        "the serve lease should shrink to its floor before any revocation")
+    pend = next(p for p in sched.pending
+                if p.resume_id == victim.lease_id)
+    drain = sched.drain_deadline(burst)      # same formula the victim got
+    # the victim's re-placement waits out the usurper's model ETA (what
+    # predict_retry_after reports) and then pays the operand restage
+    burst_eta = sched.predict_makespan(burst_job, burst.clusters, BURST_JOBS)
+    sched.release(burst)
+    assert pend.ready, "freed capacity must re-place the preempted lease"
+    resumed = pend.lease
+    restage = burst_eta + sched.placement_cost(
+        resumed.clusters, sched._stage_bytes(batch_job))
+
+    serve_w = tuple(serve.clusters)          # the original 16-wide window
+    shrunk_w = tuple(sched.current_lease(serve).clusters)
+    batch_w = tuple(victim.clusters)
+    burst_w = tuple(burst.clusters)
+
+    # quiet baseline: serve alone (p99 reference), batch alone (to place
+    # the burst arrival at its 6th completion, where the revocation lands)
+    quiet_serve = simulate_fabric(
+        [TenantWorkload("serve", decode.spec, serve_w, jobs=SERVE_STEPS,
+                        window=2)])
+    quiet_batch = simulate_fabric(
+        [TenantWorkload("batch", batch_job.spec, batch_w, jobs=BATCH_JOBS)])
+    preempt_after = 6
+    arrival = quiet_batch.job_completions["batch"][preempt_after - 1]
+
+    workloads = [
+        TenantWorkload("serve", decode.spec, serve_w, jobs=SERVE_STEPS,
+                       window=2),
+        TenantWorkload("batch", batch_job.spec, batch_w, jobs=BATCH_JOBS),
+        TenantWorkload("burst", burst_job.spec, burst_w, jobs=BURST_JOBS,
+                       arrival=arrival),
+    ]
+    events = [
+        PreemptionEvent("serve", after_jobs=preempt_after,
+                        new_clusters=shrunk_w),
+        PreemptionEvent("batch", after_jobs=preempt_after,
+                        new_clusters=tuple(resumed.clusters),
+                        restage_cycles=restage),
+    ]
+    churn = simulate_fabric(workloads, preemptions=events)
+    churn_pred = fabric_makespan_model(workloads, preemptions=events)
+    churn_err = simulator.model_error(churn_pred, churn.makespan)
+    fifo = simulate_fabric(workloads)        # no revocation: FIFO sharing
+    fifo_pred = fabric_makespan_model(workloads)
+    fifo_err = simulator.model_error(fifo_pred, fifo.makespan)
+
+    burst_churn = churn.completion["burst"] - arrival
+    burst_fifo = fifo.completion["burst"] - arrival
+    speedup = burst_fifo / burst_churn
+    util = churn.utilization(32) / fifo.utilization(32)
+    p99_quiet = _p99(_token_latencies(quiet_serve.job_completions["serve"],
+                                      0.0))
+    p99_churn = _p99(_token_latencies(churn.job_completions["serve"], 0.0))
+    p99_ratio = p99_churn / p99_quiet
+
+    assert speedup >= BURST_SPEEDUP_BAR, (
+        f"burst completion speedup {speedup:.2f}x under preemption below "
+        f"the {BURST_SPEEDUP_BAR}x bar (churn {burst_churn:.0f} cyc vs "
+        f"FIFO {burst_fifo:.0f} cyc)")
+    assert util >= UTILIZATION_BAR, (
+        f"churn utilization {util:.2f}x of FIFO below the "
+        f"{UTILIZATION_BAR}x bar")
+    assert p99_ratio <= P99_BAR, (
+        f"serve p99 token latency {p99_ratio:.2f}x of quiet baseline "
+        f"above the {P99_BAR}x bar")
+    rows: List[Row] = [
+        ("preempt/churn/makespan", churn.makespan, "cycles"),
+        ("preempt/churn/predicted", churn_pred, "cycles"),
+        ("preempt/churn/model_error", churn_err * 100, "percent"),
+        ("preempt/fifo/makespan", fifo.makespan, "cycles"),
+        ("preempt/fifo/predicted", fifo_pred, "cycles"),
+        ("preempt/fifo/model_error", fifo_err * 100, "percent"),
+        ("preempt/burst/speedup_vs_fifo", speedup, "speedup"),
+        ("preempt/utilization_vs_fifo", util, "ratio"),
+        ("preempt/serve/p99_token_quiet", p99_quiet, "cycles"),
+        ("preempt/serve/p99_token_churn", p99_churn, "cycles"),
+        ("preempt/drain_deadline", drain, "cycles"),
+    ]
+    return rows, {"speedup": speedup, "util": util, "p99_ratio": p99_ratio,
+                  "errs": [churn_err * 100, fifo_err * 100]}
+
+
+# ---------------------------------------------------------------------------
+# Claim 3: bit-identical preemption (8-device XLA host platform).
+# ---------------------------------------------------------------------------
+
+
+def _bitexact_rows() -> List[Row]:
+    import jax
+    import numpy as np
+
+    from repro.api import (
+        FaultInjector, FaultKind, FaultPlan, FaultSpec, OffloadPolicy,
+        Residency, RetryPolicy, Session,
+    )
+
+    job = jobs.make_axpy(512)
+    ops, _ = job.make_instance(0)
+    fresh_ops = [job.make_instance(i)[0] for i in (1, 2, 3)]
+
+    # unpreempted reference: resident submits + fresh submits on one lease
+    sched = FabricScheduler(jax.devices())
+    lease = sched.request(Tenant("ref"), clusters=[0, 1, 2, 3])
+    sess = Session(lease=lease)
+    sess.stage(job, dict(ops), n=4)
+    ref_res = [np.asarray(sess.submit(job, Residency.RESIDENT, n=4).wait())
+               for _ in range(2)]
+    ref_fresh = [np.asarray(sess.submit(job, dict(o), n=4).wait())
+                 for o in fresh_ops]
+    sess.close()
+
+    # preempted run: mid-stream revoke, drain, snapshot, re-place, restage
+    sched = FabricScheduler(jax.devices())
+    victim = sched.request(Tenant("victim"), clusters=[0, 1, 2, 3])
+    blocker = sched.request(Tenant("blocker"), clusters=[4, 5, 6, 7])
+    # a queued heavier tenant takes the freed window first, so the
+    # preempted lease really waits and resumes on a *different* window
+    taker = sched.request(Tenant("taker", weight=8.0), n=4, queue=True)
+    sess = Session(lease=victim)
+    sess.stage(job, dict(ops), n=4)
+    out = [np.asarray(sess.submit(job, Residency.RESIDENT, n=4).wait())]
+    pend = sched.preempt(victim)
+    assert taker.ready, "the queued tenant should take the freed window"
+    assert not pend.ready, "no free window: the re-placement must queue"
+    try:
+        sess.submit(job, Residency.RESIDENT, n=4)
+        raise AssertionError("suspended session accepted a submit")
+    except RuntimeError:
+        pass
+    sched.release(blocker)                   # frees capacity -> re-place
+    assert pend.ready and pend.lease.lease_id == victim.lease_id
+    assert tuple(pend.lease.clusters) == (4, 5, 6, 7), (
+        "the resumed lease should land on the freed window")
+    restaged = sched.health().restaged_operands
+    assert restaged >= len(ops), "resident operands were not restaged"
+    out.append(np.asarray(sess.submit(job, Residency.RESIDENT, n=4).wait()))
+    out_fresh = [np.asarray(sess.submit(job, dict(o), n=4).wait())
+                 for o in fresh_ops]
+    sess.close()
+    for got, exp in zip(out + out_fresh, ref_res + ref_fresh):
+        assert np.array_equal(got, exp), (
+            "preempted run is not bit-identical to the unpreempted run")
+
+    # chaos composition: a FaultPlan composed from two single-fault plans
+    # rides across a preemption — recovery and resume stay bit-identical
+    plan = FaultPlan([FaultSpec(FaultKind.LOST_ARRIVAL, at_dispatch=0,
+                                count=1)]).compose(
+        FaultPlan([FaultSpec(FaultKind.STRAGGLE, at_dispatch=1,
+                             factor=10.0)]))
+    pol = OffloadPolicy(retry=RetryPolicy())
+    sched = FabricScheduler(jax.devices())
+    victim = sched.request(Tenant("victim"), clusters=[0, 1, 2, 3])
+    blocker = sched.request(Tenant("blocker"), clusters=[4, 5, 6, 7])
+    sess = Session(lease=victim, policy=pol, faults=FaultInjector(plan))
+    got = [np.asarray(sess.submit(job, dict(fresh_ops[0]), n=4).wait())]
+    pend = sched.preempt(victim)
+    sched.release(blocker)
+    assert pend.ready
+    got.append(np.asarray(sess.submit(job, dict(fresh_ops[1]), n=4).wait()))
+    sess.close()
+    assert np.array_equal(got[0], ref_fresh[0])
+    assert np.array_equal(got[1], ref_fresh[1])
+
+    return [
+        ("preempt/bitexact/resident", 1.0, "count"),
+        ("preempt/bitexact/faulted", 1.0, "count"),
+        ("preempt/bitexact/restaged_operands", float(restaged), "count"),
+    ]
+
+
+def preempt_suite() -> Tuple[List[Row], str]:
+    churn_rows, churn = _churn_rows()
+    timing_rows, timing = _timing_rows()
+    rows = churn_rows + timing_rows + _bitexact_rows()
+    derived = (
+        f"churn: {churn['granted']}+{churn['shed']} of {CHURN_ARRIVALS} "
+        f"arrivals granted+shed (zero lost, {churn['preemptions']} "
+        f"preemptions); burst speedup {timing['speedup']:.2f}x over FIFO "
+        f"(bar {BURST_SPEEDUP_BAR}x) at {timing['util']:.2f}x FIFO "
+        f"utilization (bar {UTILIZATION_BAR}x); serve p99 "
+        f"{timing['p99_ratio']:.2f}x quiet (bar {P99_BAR}x); makespan "
+        f"model error max {max(timing['errs']):.2f}% (paper bar <15%); "
+        "preempted runs bit-identical (resident + composed faults)")
+    return rows, derived

@@ -63,10 +63,13 @@ SUITES = {
                  "makespan model",
     "faults": "fault recovery: bit-exact results, overhead + recovery "
               "model error",
+    "preempt": "overload ladder: churn replay, p99/utilization under "
+               "preemption, bit-exact preempt/resume",
 }
 
 #: suites the CI bench-smoke gate runs (`make bench-smoke` / ci.yml)
-CI_SUITES = ("fig07", "fig12", "staging", "session", "scheduler", "faults")
+CI_SUITES = ("fig07", "fig12", "staging", "session", "scheduler", "faults",
+             "preempt")
 
 #: row-name fragments excluded from --check (compile-dominated, unbounded noise)
 CHECK_SKIP = ("/cold", "/error", "unix_time")
@@ -205,6 +208,7 @@ def main() -> None:
         offload_wallclock, serve_throughput, staging_wall, stream_wallclock,
     )
     from benchmarks.paper_figs import ALL_FIGS
+    from benchmarks.preempt_bench import preempt_suite
     from benchmarks.scheduler_bench import scheduler_suite
     from benchmarks.session_bench import session_suite
     from benchmarks.staging import staging_suite
@@ -219,6 +223,7 @@ def main() -> None:
     suites["session"] = session_suite
     suites["scheduler"] = scheduler_suite
     suites["faults"] = faults_suite
+    suites["preempt"] = preempt_suite
     missing = sorted(set(suites) ^ set(SUITES))
     assert not missing, f"suite registry out of sync: {missing}"
     if keep is not None:

@@ -11,7 +11,10 @@ of the whole mesh; see the README's "Fabric scheduler" section), and the
 fault-tolerance substrate (:class:`FaultPlan` / :class:`FaultInjector` /
 :class:`RetryPolicy` — deterministic fault injection, model-driven
 deadlines, and the resubmit → backup-window → lease-failover escalation
-ladder; README "Fault tolerance").
+ladder; README "Fault tolerance"), and the overload substrate
+(revocable leases via :meth:`FabricScheduler.preempt`, SLO admission
+with the typed :class:`Overloaded` error, and the graceful-degradation
+ladder; README "Preemption & overload").
 
 Quickstart::
 
@@ -39,6 +42,8 @@ from repro.core.fabric import (
     FabricScheduler,
     LeaseError,
     LeaseUnavailable,
+    Overloaded,
+    PendingLease,
     SchedulerPolicy,
     Tenant,
 )
@@ -108,8 +113,10 @@ __all__ = [
     "OffloadConfig",
     "OffloadPolicy",
     "OffloadRuntime",
+    "Overloaded",
     "PAPER_JOBS",
     "PaperJob",
+    "PendingLease",
     "PlanDecision",
     "PlanStats",
     "Planner",

@@ -155,13 +155,26 @@ class CompletionUnit:
         register state (``outstanding()``) has already been read as the
         failure signal, and the unit must be reusable for the resubmit.
         A unit that is not tracking an offload cancels as a no-op (0).
+
+        A cancel also *purges* the job's already-fired interrupt state:
+        if its completion raced the cancel (all arrivals landed, cause
+        pending or deferred behind another job's IPI — fig. 6's replay
+        path), the stale cause must not fire for, or be collected by, a
+        later job sharing the unit.
         """
         regs = self._regs[job_id % len(self._regs)]
-        if regs.offload == 0:
-            return 0
-        missing = regs.offload - regs.arrivals
-        regs.offload = 0
-        regs.arrivals = 0
+        missing = 0
+        if regs.offload != 0:
+            missing = regs.offload - regs.arrivals
+            regs.offload = 0
+            regs.arrivals = 0
+        # purge a completion that raced the cancel (the deferred-IRQ
+        # replay in clear() would otherwise resurrect it later)
+        if self._pending_irq == job_id:
+            self._pending_irq = (self._deferred.pop(0) if self._deferred
+                                 else None)
+        self._deferred = [j for j in self._deferred if j != job_id]
+        self._collected.discard(job_id)
         return missing
 
     def outstanding(self) -> Dict[int, int]:

@@ -33,6 +33,19 @@ dispatch and resume serializes on the one host core) is modeled by
 :func:`repro.core.simulator.simulate_fabric`; the ``scheduler`` bench
 suite validates utilization, placement regret vs. exhaustive search,
 and the closed-form makespan prediction against it.
+
+PR 7 makes the scheduler *overload-robust* the way PR 6 made it
+fault-robust: leases are revocable (:meth:`FabricScheduler.preempt`
+drains the victim under a §6-model drain deadline, snapshots residency
+through the failover host-snapshot path, and re-places it later with
+resident operands restaged through the broadcast tree — bit-identical
+outputs), admission is SLO-aware (``Tenant(slo=..., priority=...)``, a
+typed :class:`Overloaded` instead of silent queue growth), grant
+ordering uses ``Tenant.weight`` with aging so backfill cannot starve
+large requests, and pressure walks a graceful-degradation ladder
+(compaction → elastic floor shrink → pow2 degrade → priority
+preemption) before anything is shed.  The ``preempt`` bench suite
+gates it with a trace-driven serve×offload churn scenario.
 """
 
 from __future__ import annotations
@@ -62,6 +75,19 @@ class LeaseUnavailable(LeaseError):
     """No placement satisfies the request right now (queueable)."""
 
 
+class Overloaded(LeaseUnavailable):
+    """Typed admission backpressure: the contention model predicts the
+    request would violate its tenant's SLO (or the queue is at its
+    configured depth), so the scheduler *sheds* instead of silently
+    queueing.  ``retry_after_cycles`` is the model-predicted virtual
+    cycles until capacity next frees — the earliest re-submit worth
+    making."""
+
+    def __init__(self, message: str, *, retry_after_cycles: float = 0.0):
+        super().__init__(message)
+        self.retry_after_cycles = float(retry_after_cycles)
+
+
 @dataclasses.dataclass
 class FabricHealth:
     """Scheduler-side recovery counters (the fabric analogue of
@@ -72,6 +98,11 @@ class FabricHealth:
     degradations: int = 0        # failovers that had to shrink the lease
     lost_leases: int = 0         # leases with no healthy window at all
     restaged_operands: int = 0   # resident operands re-staged on failover
+    preemptions: int = 0         # leases revoked (drained + re-queued)
+    migrations: int = 0          # leases moved by defragmenting compaction
+    floor_shrinks: int = 0       # elastic serve floors halved under pressure
+    degraded_grants: int = 0     # requests granted a smaller pow2 window
+    overloaded: int = 0          # admissions shed with a typed Overloaded
 
     def snapshot(self) -> "FabricHealth":
         return dataclasses.replace(self)
@@ -79,16 +110,32 @@ class FabricHealth:
 
 @dataclasses.dataclass(frozen=True)
 class Tenant:
-    """A fabric tenant, to the scheduler's admission model."""
+    """A fabric tenant, to the scheduler's admission model.
+
+    ``weight`` is the fair-share weight inside a priority class (grant
+    ordering ages it, see :meth:`FabricScheduler._admit_pending`);
+    ``priority`` is the preemption class — under a ``preemption``
+    policy, higher-priority requests may revoke lower-priority leases.
+    ``slo`` (virtual cycles) arms SLO admission: a request whose
+    model-predicted queue wait + makespan exceeds it is shed with a
+    typed :class:`Overloaded` instead of queueing.
+    """
 
     name: str
     kind: TenantKind = TenantKind.OFFLOAD
-    weight: float = 1.0          # informational fair-share weight
+    weight: float = 1.0          # fair-share weight within a priority class
+    slo: Optional[float] = None  # max predicted wait+makespan, virtual cycles
+    priority: int = 0            # preemption class; higher may revoke lower
 
     def __post_init__(self) -> None:
         if not self.name:
             raise ValueError("tenant name must be non-empty")
         object.__setattr__(self, "kind", TenantKind(self.kind))
+        if self.weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {self.weight}")
+        if self.slo is not None and self.slo <= 0:
+            raise ValueError(f"tenant slo must be > 0 cycles, got {self.slo}")
+        object.__setattr__(self, "priority", int(self.priority))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,11 +153,27 @@ class SchedulerPolicy:
     * ``share_slack`` — when the model sizes a slice (``n=None`` with a
       job), any smaller candidate within ``1 + share_slack`` of the best
       predicted makespan wins, leaving head-room for co-tenants.
+    * ``preemption`` — ``"off"`` keeps admission cooperative;
+      ``"priority"`` arms the overload ladder: a request that cannot
+      place first compacts the fabric, then shrinks elastic serve
+      floors, then degrades itself to a smaller pow2 window at
+      model-equal makespan, then revokes strictly-lower-priority leases
+      (drain → snapshot → re-queue), before shedding.
+    * ``max_queue_depth`` — ``queue=True`` requests beyond this depth
+      are shed with a typed :class:`Overloaded` instead of enqueued
+      (``None`` = unbounded).
+    * ``aging_grants`` — starvation bound for the pending queue: once a
+      blocked entry has been bypassed by this many backfill grants it
+      reserves the fabric (no further backfill behind it) until it
+      places.
     """
 
     placement: str = "model"
     align: bool = True
     share_slack: float = 0.05
+    preemption: str = "off"
+    max_queue_depth: Optional[int] = None
+    aging_grants: int = 8
 
     def __post_init__(self) -> None:
         if self.placement not in ("model", "first_fit"):
@@ -119,6 +182,15 @@ class SchedulerPolicy:
         if self.share_slack < 0:
             raise ValueError(
                 f"share_slack must be >= 0, got {self.share_slack}")
+        if self.preemption not in ("off", "priority"):
+            raise ValueError(
+                f"preemption {self.preemption!r} not in ('off', 'priority')")
+        if self.max_queue_depth is not None and self.max_queue_depth < 0:
+            raise ValueError(
+                f"max_queue_depth must be >= 0, got {self.max_queue_depth}")
+        if self.aging_grants < 1:
+            raise ValueError(
+                f"aging_grants must be >= 1, got {self.aging_grants}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,7 +262,15 @@ class ClusterLease:
 
 
 class PendingLease:
-    """A queued lease request; ``lease`` is set when the grant lands."""
+    """A queued lease request; ``lease`` is set when the grant lands.
+
+    ``skipped`` counts backfill grants that bypassed this entry while it
+    was blocked — the aging input to grant ordering and the head
+    reservation that bounds starvation.  A pending entry produced by
+    :meth:`FabricScheduler.preempt` carries ``resume_id`` (the revoked
+    lease's id): its grant re-keys under that id and resumes the
+    suspended session with its snapshots restaged.
+    """
 
     def __init__(self, tenant: str, n: Optional[int],
                  clusters: Optional[Tuple[int, ...]],
@@ -201,6 +281,10 @@ class PendingLease:
         self.job = job
         self.batch = batch
         self.lease: Optional[ClusterLease] = None
+        self.seq: int = 0                      # FIFO arrival order
+        self.skipped: int = 0                  # bypassing backfill grants
+        self.cancelled: bool = False
+        self.resume_id: Optional[int] = None   # preempted lease to resume
 
     @property
     def ready(self) -> bool:
@@ -241,10 +325,18 @@ class FabricScheduler:
         self._tenants: Dict[str, Tenant] = {}
         self._pending: Deque[PendingLease] = collections.deque()
         self._next_id = itertools.count(1)
+        self._next_seq = itertools.count(1)       # pending arrival order
         self._unhealthy: set = set()              # failed global cluster ids
         self._health = FabricHealth()
         # lease_id -> weakref to the bound Session (failover callback)
         self._sessions: Dict[int, Any] = {}
+        # lease_id -> (job, batch) as granted — drain deadlines + ETAs
+        self._grant_info: Dict[int, Tuple[Any, int]] = {}
+        # lease_id -> predicted makespan at grant (admission ETA model)
+        self._eta: Dict[int, float] = {}
+        # lease_id -> elastic floor (serve tenants; pressure ladder rung 2)
+        self._elastic: Dict[int, int] = {}
+        self._hold_admit = False                  # defer grants mid-ladder
 
     # -- introspection ------------------------------------------------------
 
@@ -390,9 +482,17 @@ class FabricScheduler:
         Exactly one sizing input: ``n`` (place a window of that size),
         ``clusters`` (an explicit global window — rejected when it
         overlaps a live lease), or ``job`` alone (the model picks the
-        slice size for ``batch`` instances).  When no placement fits,
-        raises :class:`LeaseUnavailable` — or, with ``queue=True``,
-        returns a :class:`PendingLease` granted FIFO as capacity frees.
+        slice size for ``batch`` instances).  When no placement fits
+        and ``policy.preemption`` is armed, the overload ladder runs
+        (compact → shrink elastic floors → degrade to a smaller pow2 at
+        model-equal makespan → revoke lower-priority leases) before the
+        request queues or sheds.  With no placement, raises
+        :class:`LeaseUnavailable` — or, with ``queue=True``, returns a
+        :class:`PendingLease` granted in weighted-aging priority order
+        as capacity frees, unless admission control sheds the request
+        with a typed :class:`Overloaded` (queue at ``max_queue_depth``,
+        or the contention model predicts the tenant's ``slo`` would be
+        violated).
         """
         tenant = (tenant if isinstance(tenant, Tenant)
                   else self._tenants.get(tenant, Tenant(tenant)))
@@ -420,12 +520,12 @@ class FabricScheduler:
                 holders = sorted({self._leases[self._owner[c]].tenant
                                   for c in taken})
                 if queue:
-                    return self._enqueue(tenant.name, None, window, job,
+                    return self._enqueue(tenant, None, window, job,
                                          batch)
                 raise LeaseUnavailable(
                     f"clusters {taken} already leased (by "
                     f"{', '.join(holders)})")
-            return self._grant(tenant.name, window)
+            return self._grant(tenant.name, window, job=job, batch=batch)
         if n is not None:
             if n < 1:
                 raise ValueError(f"lease size must be >= 1, got {n}")
@@ -438,32 +538,120 @@ class FabricScheduler:
             window = self._pick_slice(job, batch)
         else:
             raise ValueError("give one of n / clusters / job")
+        if window is None and self.policy.preemption != "off":
+            window = self._pressure_place(tenant, n, job, batch)
+            if window is not None:
+                lease = self._grant(tenant.name, window, job=job,
+                                    batch=batch)
+                # preempted victims / queued entries take what's left
+                self._admit_pending()
+                return lease
         if window is None:
             if queue:
-                return self._enqueue(tenant.name, n, None, job, batch)
+                return self._enqueue(tenant, n, None, job, batch)
             raise LeaseUnavailable(
                 f"no contiguous window of "
                 f"{n if n is not None else 'model-sized'} free clusters "
                 f"(free: {self.free_clusters()})")
-        return self._grant(tenant.name, window)
+        return self._grant(tenant.name, window, job=job, batch=batch)
 
-    def _enqueue(self, tenant: str, n: Optional[int],
+    # -- admission control ---------------------------------------------------
+
+    def predict_retry_after(self, job: Any = None, batch: int = 1) -> float:
+        """Model-predicted virtual cycles until fabric capacity next
+        frees: the smallest grant-time predicted makespan among live
+        leases (the first lease the §6 model expects to complete).
+        Carried on :class:`Overloaded` so shed tenants know the
+        earliest re-submit worth making."""
+        etas = [self._eta[i] for i in self._leases if i in self._eta]
+        return min(etas, default=0.0)
+
+    def _admission_gate(self, tenant: Tenant, n: Optional[int],
+                        job: Any, batch: int) -> None:
+        """Shed (typed ``Overloaded``) instead of queueing when the
+        queue is at depth or the contention model predicts the
+        tenant's SLO cannot be met: predicted queue wait (smallest
+        live-lease ETA) plus the request's own predicted makespan on a
+        hypothetical freed window must fit inside ``tenant.slo``."""
+        pol = self.policy
+        if (pol.max_queue_depth is not None
+                and len(self._pending) >= pol.max_queue_depth):
+            self._health.overloaded += 1
+            raise Overloaded(
+                f"pending queue at max_queue_depth={pol.max_queue_depth}; "
+                f"request shed",
+                retry_after_cycles=self.predict_retry_after(job, batch))
+        if tenant.slo is None:
+            return
+        wait = self.predict_retry_after(job, batch)
+        own = 0.0
+        if job is not None:
+            size = n if n is not None else 1
+            hypothetical = tuple(range(min(size, self.num_clusters)))
+            own = self.predict_makespan(job, hypothetical, batch)
+        if wait + own > tenant.slo:
+            self._health.overloaded += 1
+            raise Overloaded(
+                f"tenant {tenant.name!r} slo={tenant.slo:.0f} cycles < "
+                f"predicted wait {wait:.0f} + makespan {own:.0f}; "
+                f"request shed",
+                retry_after_cycles=wait)
+
+    def _enqueue(self, tenant: Tenant, n: Optional[int],
                  clusters: Optional[Tuple[int, ...]], job: Any,
                  batch: int) -> PendingLease:
-        pend = PendingLease(tenant, n, clusters, job, batch)
+        self._admission_gate(tenant, n if n is not None else
+                             (len(clusters) if clusters else None),
+                             job, batch)
+        pend = PendingLease(tenant.name, n, clusters, job, batch)
+        pend.seq = next(self._next_seq)
         self._pending.append(pend)
         return pend
 
-    def _grant(self, tenant: str, window: Tuple[int, ...]) -> ClusterLease:
-        lease = ClusterLease(next(self._next_id), tenant, window,
-                             scheduler=self)
+    def cancel(self, pending: PendingLease) -> None:
+        """Withdraw a queued request.  Without this a dead tenant's
+        entry pins the queue (and, once aged, reserves the fabric)
+        forever.  Raises :class:`LeaseError` if the request was already
+        granted (release the lease instead), already cancelled, or was
+        never queued here."""
+        if pending.ready:
+            raise LeaseError(
+                f"pending request for tenant {pending.tenant!r} was "
+                "already granted; release the lease instead")
+        if pending.cancelled or pending not in self._pending:
+            raise LeaseError(
+                f"pending request for tenant {pending.tenant!r} is not "
+                "queued on this scheduler")
+        self._pending.remove(pending)
+        pending.cancelled = True
+        # a cancelled aged head may have been reserving the fabric
+        self._admit_pending()
+
+    def _grant(self, tenant: str, window: Tuple[int, ...], *,
+               job: Any = None, batch: int = 1,
+               lease_id: Optional[int] = None) -> ClusterLease:
+        lease = ClusterLease(
+            lease_id if lease_id is not None else next(self._next_id),
+            tenant, window, scheduler=self)
         for c in window:
             self._owner[c] = lease.lease_id
         self._leases[lease.lease_id] = lease
+        self._grant_info[lease.lease_id] = (job, batch)
+        if job is not None:
+            self._eta[lease.lease_id] = self.predict_makespan(
+                job, window, batch)
+        else:
+            self._eta[lease.lease_id] = self.placement_cost(window)
         return lease
 
+    def _forget(self, lease_id: int) -> None:
+        self._leases.pop(lease_id, None)
+        self._grant_info.pop(lease_id, None)
+        self._eta.pop(lease_id, None)
+        self._elastic.pop(lease_id, None)
+
     def release(self, lease: ClusterLease) -> None:
-        """Return the lease's clusters and grant queued requests FIFO."""
+        """Return the lease's clusters and grant queued requests."""
         current = self._current(lease)
         if current is None:
             raise LeaseError(f"lease {lease.lease_id} is not active")
@@ -473,27 +661,73 @@ class FabricScheduler:
                 "resized; release the current one)")
         for c in current.clusters:
             self._owner.pop(c, None)
-        del self._leases[lease.lease_id]
+        self._forget(lease.lease_id)
         self._admit_pending()
 
+    def _rank(self, pend: PendingLease) -> Tuple[int, float, int]:
+        """Grant order: priority class desc, aged fair-share weight
+        desc (``weight × (1 + skipped)`` — every bypassing backfill
+        grant raises a blocked entry's effective weight), FIFO last."""
+        ten = self._tenants.get(pend.tenant, Tenant(pend.tenant))
+        return (-ten.priority, -ten.weight * (1.0 + pend.skipped), pend.seq)
+
+    def _try_place(self, pend: PendingLease) -> Optional[Tuple[int, ...]]:
+        if pend.clusters is not None:
+            if any(c in self._owner or c in self._unhealthy
+                   for c in pend.clusters):
+                return None
+            return pend.clusters
+        if pend.n is not None:
+            return self._place(pend.n, job=pend.job, batch=pend.batch)
+        return self._pick_slice(pend.job, pend.batch)
+
     def _admit_pending(self) -> None:
-        """FIFO grant of queued requests, backfilling past blocked heads."""
-        for pend in list(self._pending):
-            if pend.ready:
-                self._pending.remove(pend)
-                continue
-            if pend.clusters is not None:
-                if any(c in self._owner for c in pend.clusters):
+        """Grant queued requests in weighted-aging priority order.
+
+        Candidates are ranked by :meth:`_rank` and re-ranked after every
+        grant (each grant changes the placement state).  A grant that
+        lands *behind* a blocked higher-ranked entry is backfill: it
+        ages the blocked entry (``skipped += 1``).  Once the top blocked
+        entry has been bypassed ``policy.aging_grants`` times it
+        reserves the fabric — no further backfill is granted past it,
+        so freed capacity accrues until the starved request fits.  This
+        bounds head-of-line starvation at ``aging_grants`` bypasses
+        (regression-tested in ``tests/test_fabric.py``).
+        """
+        if self._hold_admit:
+            return
+        while True:
+            for p in list(self._pending):
+                if p.ready:
+                    self._pending.remove(p)
+            queue = sorted(self._pending, key=self._rank)
+            if not queue:
+                return
+            blocked: List[PendingLease] = []
+            granted = None
+            for pend in queue:
+                if (blocked
+                        and blocked[0].skipped >= self.policy.aging_grants):
+                    break           # head reservation: stop backfilling
+                window = self._try_place(pend)
+                if window is None:
+                    blocked.append(pend)
                     continue
-                window: Optional[Tuple[int, ...]] = pend.clusters
-            elif pend.n is not None:
-                window = self._place(pend.n, job=pend.job, batch=pend.batch)
-            else:
-                window = self._pick_slice(pend.job, pend.batch)
-            if window is None:
-                continue
-            pend.lease = self._grant(pend.tenant, window)
-            self._pending.remove(pend)
+                granted = pend
+                lease = self._grant(pend.tenant, window, job=pend.job,
+                                    batch=pend.batch,
+                                    lease_id=pend.resume_id)
+                self._pending.remove(pend)
+                for b in blocked:
+                    b.skipped += 1
+                if pend.resume_id is not None:
+                    sess = self._bound_session(lease.lease_id)
+                    if sess is not None:
+                        self._health.restaged_operands += sess._resume(lease)
+                pend.lease = lease
+                break
+            if granted is None:
+                return
 
     def resize(self, lease: ClusterLease, n: int) -> ClusterLease:
         """Elastic grow/shrink — the serve tenant's burst mechanism.
@@ -543,6 +777,17 @@ class FabricScheduler:
             for c in old:
                 self._owner.pop(c, None)
             window_opt = self._place(n)
+            if window_opt is None and self.policy.preemption != "off":
+                # the overload ladder may free room for the grown window
+                # (a serve burst outranking offload churn); our own
+                # holding stays out of the pool and off the victim list
+                ten = self._tenants.get(current.tenant,
+                                        Tenant(current.tenant))
+                job, batch = self._grant_info.get(current.lease_id,
+                                                  (None, 1))
+                window_opt = self._pressure_place(
+                    ten, n, job, batch, exclude={current.lease_id},
+                    degrade=False)
             if window_opt is None:
                 for c in old:           # roll back
                     self._owner[c] = current.lease_id
@@ -559,6 +804,244 @@ class FabricScheduler:
         # a relocation freed the old window: queued requests may fit now
         self._admit_pending()
         return replaced
+
+    # -- preemption & the overload ladder -----------------------------------
+
+    def drain_deadline(self, lease: ClusterLease) -> float:
+        """§6-model drain deadline for revoking ``lease``: the predicted
+        makespan of the work granted on it (job + staging + batch
+        pipeline; nominal staging footprint when the grant named no
+        job), times the retry-ladder deadline factor —
+        ``deadline_factor × predict_makespan(job, window, batch)``.
+        The victim's in-flight window must drain within this budget;
+        jobs that miss it are the fault ladder's problem
+        (:class:`repro.core.faults.CompletionTimeout`), not the
+        preemption path's."""
+        from repro.core.faults import deadline_cycles
+        from repro.core.policy import RetryPolicy
+        job, batch = self._grant_info.get(lease.lease_id, (None, 1))
+        if job is not None:
+            base = self.predict_makespan(job, lease.clusters, batch)
+        else:
+            base = self.placement_cost(lease.clusters)
+        return deadline_cycles(base, RetryPolicy())
+
+    def preempt(self, lease: ClusterLease, *,
+                queue: bool = True) -> Optional[PendingLease]:
+        """Revoke ``lease``'s window now; with ``queue=True`` re-queue
+        it for re-placement under the same lease id.
+
+        The bound session is *suspended*: its in-flight window drains
+        under the model-predicted :meth:`drain_deadline`, resident
+        operands are snapshotted on the host via the failover snapshot
+        path, and its runtimes are dropped.  The window returns to the
+        pool.  When the queued entry re-places, the snapshots are
+        restaged through the lease's broadcast tree and the session
+        resumes — outputs are bit-identical across the preemption (the
+        ``preempt`` bench asserts it).  With ``queue=False`` the lease
+        ends permanently and the bound session is closed (see
+        :meth:`revoke`).  Returns the re-placement :class:`PendingLease`
+        (possibly already ``ready`` — re-placed immediately elsewhere,
+        which is exactly a compaction migration), or ``None`` with
+        ``queue=False``.
+        """
+        current = self._current(lease)
+        if current is None:
+            raise LeaseError(f"lease {lease.lease_id} is not active")
+        deadline = self.drain_deadline(current)
+        sess = self._bound_session(current.lease_id)
+        if sess is not None:
+            sess._suspend(deadline)
+        for c in current.clusters:
+            self._owner.pop(c, None)
+        job, batch = self._grant_info.get(current.lease_id, (None, 1))
+        n = current.n
+        self._forget(current.lease_id)
+        self._health.preemptions += 1
+        if not queue:
+            self._sessions.pop(current.lease_id, None)
+            if sess is not None:
+                sess._close_revoked()
+            self._admit_pending()
+            return None
+        pend = PendingLease(current.tenant, n, None, job, batch)
+        pend.seq = next(self._next_seq)
+        pend.resume_id = current.lease_id
+        self._pending.append(pend)
+        self._admit_pending()
+        return pend
+
+    def revoke(self, lease: ClusterLease) -> None:
+        """Permanently revoke ``lease``: drain the victim's in-flight
+        window under the model deadline, then end the lease without
+        re-queueing (the bound session is closed and the window goes to
+        the pool / pending queue)."""
+        self.preempt(lease, queue=False)
+
+    def compact(self, max_moves: Optional[int] = None) -> int:
+        """Defragmenting compaction: migrate leases to the lowest free
+        start (revoke→re-place through the bit-exact snapshot/restage
+        path) until no lease can move left, so free capacity coalesces
+        into large aligned windows instead of unusable gaps.  Returns
+        the number of migrations."""
+        moves = 0
+        while max_moves is None or moves < max_moves:
+            moved = False
+            for lease in sorted(self.leases, key=lambda l: l.start):
+                for c in lease.clusters:
+                    self._owner.pop(c, None)
+                windows = self._windows(lease.n)
+                target = min((w for w in windows if w[0] < lease.start),
+                             key=lambda w: w[0], default=None)
+                if target is None:
+                    for c in lease.clusters:
+                        self._owner[c] = lease.lease_id
+                    continue
+                self._migrate(lease, target)
+                moved = True
+                moves += 1
+                break
+            if not moved:
+                break
+        return moves
+
+    def _migrate(self, lease: ClusterLease,
+                 window: Tuple[int, ...]) -> ClusterLease:
+        """Move ``lease`` (owners already freed by the caller) onto
+        ``window``, rebinding and restaging its session in place."""
+        replaced = dataclasses.replace(lease, clusters=window)
+        for c in window:
+            self._owner[c] = replaced.lease_id
+        self._leases[replaced.lease_id] = replaced
+        self._health.migrations += 1
+        sess = self._bound_session(replaced.lease_id)
+        if sess is not None:
+            self._health.restaged_operands += sess._rebind(replaced)
+        return replaced
+
+    def register_elastic(self, lease: ClusterLease, floor: int) -> None:
+        """Mark ``lease`` as an elastic serve lease with a shrinkable
+        ``floor`` — the overload ladder shrinks it back to (and under
+        pressure, below) the floor before revoking anything."""
+        if self._current(lease) is None:
+            raise LeaseError(f"lease {lease.lease_id} is not active")
+        self._elastic[lease.lease_id] = max(1, int(floor))
+
+    def unregister_elastic(self, lease: ClusterLease) -> None:
+        self._elastic.pop(lease.lease_id, None)
+
+    def elastic_floor(self, lease: ClusterLease) -> Optional[int]:
+        """The scheduler's current floor for an elastic lease (pressure
+        may have shrunk it below what the tenant registered)."""
+        return self._elastic.get(lease.lease_id)
+
+    def _shrink_elastic(self, exclude: frozenset = frozenset()) -> bool:
+        """Pressure rung 2: shrink elastic (serve) leases back to their
+        floors; if every lease already sits at its floor, halve the
+        floors themselves (never below 1) — graceful degradation of
+        serving capacity before anything is revoked."""
+        changed = False
+        for lid, floor in sorted(self._elastic.items()):
+            if lid in exclude:
+                continue
+            lease = self._leases.get(lid)
+            if lease is None:
+                self._elastic.pop(lid, None)
+                continue
+            if lease.n > floor:
+                self.resize(lease, floor)
+                changed = True
+        if changed:
+            return True
+        for lid, floor in sorted(self._elastic.items()):
+            if lid in exclude or floor <= 1:
+                continue
+            lease = self._leases.get(lid)
+            if lease is None:
+                continue
+            self._elastic[lid] = floor // 2
+            self._health.floor_shrinks += 1
+            if lease.n > floor // 2:
+                self.resize(lease, floor // 2)
+            changed = True
+        return changed
+
+    def _preempt_for(self, tenant: Tenant, place: Any,
+                     exclude: frozenset = frozenset()
+                     ) -> Optional[Tuple[int, ...]]:
+        """Pressure rung 4: revoke (drain + re-queue) leases whose
+        tenants sit in a strictly lower priority class — lowest
+        priority, lowest weight, youngest first — one at a time, until
+        ``place()`` succeeds or the victims run out.  Elastic serve
+        leases are never victims (rung 2 shrinks them instead)."""
+        victims = [l for l in self.leases
+                   if l.lease_id not in exclude
+                   and l.lease_id not in self._elastic
+                   and self._tenant_of(l).priority < tenant.priority]
+        victims.sort(key=lambda l: (self._tenant_of(l).priority,
+                                    self._tenant_of(l).weight,
+                                    -l.lease_id))
+        for victim in victims:
+            self.preempt(victim)
+            window = place()
+            if window is not None:
+                return window
+        return None
+
+    def _tenant_of(self, lease: ClusterLease) -> Tenant:
+        return self._tenants.get(lease.tenant, Tenant(lease.tenant))
+
+    def _pressure_place(self, tenant: Tenant, n: Optional[int], job: Any,
+                        batch: int, *, exclude: frozenset = frozenset(),
+                        degrade: bool = True
+                        ) -> Optional[Tuple[int, ...]]:
+        """The overload ladder, run when a request cannot place under a
+        ``preemption`` policy.  Rungs, least disruptive first; each is
+        followed by a placement retry:
+
+        1. **compact** — defragment so existing free capacity coalesces;
+        2. **shrink elastic floors** — serve tenants give back burst
+           room, then halve their floors;
+        3. **degrade the request** — a smaller power-of-two window whose
+           predicted makespan is model-equal (within ``share_slack``) to
+           the full-size ask;
+        4. **revoke lower-priority leases** — drain, snapshot, re-queue.
+
+        Grants to the pending queue are held while the ladder runs so
+        freed capacity goes to the requester first; the caller admits
+        the queue right after granting."""
+        def place() -> Optional[Tuple[int, ...]]:
+            if n is not None:
+                return self._place(n, job=job, batch=batch)
+            return self._pick_slice(job, batch)
+
+        self._hold_admit = True
+        try:
+            if self.compact():
+                window = place()
+                if window is not None:
+                    return window
+            if self._shrink_elastic(exclude):
+                window = place()
+                if window is not None:
+                    return window
+            if degrade and n is not None and job is not None and n > 1:
+                ref = self.predict_makespan(
+                    job, tuple(range(min(n, self.num_clusters))), batch)
+                m = 1 << (n.bit_length() - 1)
+                if m == n:
+                    m //= 2
+                while m >= 1:
+                    window = self._place(m, job=job, batch=batch)
+                    if (window is not None
+                            and self.predict_makespan(job, window, batch)
+                            <= ref * (1.0 + self.policy.share_slack)):
+                        self._health.degraded_grants += 1
+                        return window
+                    m //= 2
+            return self._preempt_for(tenant, place, exclude)
+        finally:
+            self._hold_admit = False
 
     # -- failure handling ---------------------------------------------------
 
@@ -617,7 +1100,7 @@ class FabricScheduler:
             degraded = window is not None
         sess = self._bound_session(lease.lease_id)
         if window is None:
-            del self._leases[lease.lease_id]
+            self._forget(lease.lease_id)
             self._sessions.pop(lease.lease_id, None)
             self._health.lost_leases += 1
             if sess is not None:

@@ -122,6 +122,23 @@ class FaultPlan:
     def __repr__(self) -> str:
         return f"FaultPlan({list(self.faults)!r})"
 
+    def compose(self, *others: "FaultPlan") -> "FaultPlan":
+        """Chaos composition: merge fault schedules into one plan,
+        ordered by dispatch index (ties keep the operand order).  The
+        ``preempt`` churn bench composes a random plan onto its arrival
+        trace this way — overload handling and fault recovery share one
+        injector."""
+        merged = list(self.faults)
+        for other in others:
+            merged.extend(other.faults)
+        merged.sort(key=lambda f: f.at_dispatch)
+        return FaultPlan(merged)
+
+    def __add__(self, other: "FaultPlan") -> "FaultPlan":
+        if not isinstance(other, FaultPlan):
+            return NotImplemented
+        return self.compose(other)
+
     @staticmethod
     def random(seed: int, *, n_faults: int = 2, num_clusters: int = 8,
                max_dispatch: int = 4,

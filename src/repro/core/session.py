@@ -54,7 +54,7 @@ import numpy as np
 from repro.core import model as amodel
 from repro.core import multicast as mc
 from repro.core import simulator
-from repro.core.fabric import ClusterLease
+from repro.core.fabric import ClusterLease, Overloaded
 from repro.core.faults import (
     PROBE_N, CompletionTimeout, FaultError, FaultInjector, SessionHealth,
     deadline_cycles,
@@ -585,6 +585,9 @@ class Session:
         self._health = SessionHealth()
         self._runtimes: Dict[OffloadConfig, OffloadRuntime] = {}
         self._closed = False
+        self._suspended = False       # lease preempted, awaiting re-place
+        self._preempt_snaps: List[Tuple] = []
+        self._drain_deadline = 0.0    # model drain budget of the last suspend
         if lease is not None:
             # the session binds the lease's fabric window, not the global
             # mesh: submits select within it, plans/trees key on its
@@ -659,6 +662,11 @@ class Session:
             raise RuntimeError(
                 f"{op} on a closed session (its lease over clusters "
                 f"{self._cluster_ids} was released)")
+        if self._suspended:
+            raise RuntimeError(
+                f"{op} on a suspended session: its lease was preempted "
+                "and is queued for re-placement (resident operands are "
+                "snapshotted and restage on resume)")
 
     # -- plumbing -----------------------------------------------------------
 
@@ -791,6 +799,7 @@ class Session:
                            n_units=self.n_units, params=self.params,
                            operands=first_ops, planner=self.planner)
             self._est_cache[cache_key] = est
+        self._slo_gate(est, batch)
         decision = est.decision
         rt = self._runtime_for(pol)
         t0 = time.monotonic()
@@ -882,6 +891,7 @@ class Session:
             else Staging.DIRECT)
         ids, _ = self._selection_ids(rpol, n, request, clusters)
         est = self._reliable_est(job, ids, rpol)
+        self._slo_gate(est, len(instances))
         return ReliableHandle(self, job, est, instances, args_list,
                               rpol, retry, multi, ids)
 
@@ -1067,21 +1077,13 @@ class Session:
             self._health.degraded += 1
         return healthy[:n_sel]
 
-    def _rebind(self, new_lease: Optional[ClusterLease]) -> int:
-        """Failover callback from ``FabricScheduler.fail_clusters``: move
-        this session onto ``new_lease``'s window (``None`` = no healthy
-        window existed; the session closes).  Resident operands whose
-        host-side snapshots the plans hold are re-staged through the same
-        strategy they originally rode (a tree-staged weight re-crosses
-        the host link once, to the new root).  Returns the number of
-        operands restaged."""
-        self._drain_tolerant()
+    def _snapshot_resident(self) -> List[Tuple]:
+        """Host-side snapshots of every fully-resident plan — the
+        failover/preemption snapshot path.  Each entry carries what a
+        restage needs: the job, the host operand dict, the
+        window-relative placement, the staging strategy the operands
+        originally rode, and the runtime config."""
         old_ids = list(self._cluster_ids)
-        if new_lease is None:
-            self._closed = True
-            self._lease = None
-            return 0
-        # snapshot resident state before dropping the old-window runtimes
         snapshots = []
         for rt in self._runtimes.values():
             for plan in rt._plans.values():
@@ -1091,13 +1093,19 @@ class Session:
                 rel = [old_ids.index(c) for c in plan.cluster_ids]
                 snapshots.append((plan.job, src, rel, plan._staged_via,
                                   plan.fuse, plan.args_shape, rt.config))
-        self._lease = new_lease
-        self._devices = list(new_lease.devices)
-        self._cluster_ids = tuple(new_lease.clusters)
+        return snapshots
+
+    def _drop_runtimes(self) -> None:
         self._runtimes = {}
         self._streams = {}
         self._fused_inflight = collections.deque()
         self._est_cache = {}
+
+    def _restage(self, snapshots: List[Tuple]) -> int:
+        """Replay resident snapshots onto the current window through the
+        same staging strategy they originally rode (a tree-staged weight
+        re-crosses the host link once, to the new root).  Returns the
+        number of operands restaged."""
         restaged = 0
         for job, src, rel, via, fuse, args_shape, cfg in snapshots:
             if max(rel) >= len(self._cluster_ids):
@@ -1107,9 +1115,95 @@ class Session:
                            args_shape=args_shape, fuse=fuse)
             plan.stage(src, _caller_owned=False, via=via)
             restaged += len(src)
+        return restaged
+
+    def _rebind(self, new_lease: Optional[ClusterLease]) -> int:
+        """Failover callback from ``FabricScheduler.fail_clusters``: move
+        this session onto ``new_lease``'s window (``None`` = no healthy
+        window existed; the session closes).  Returns the number of
+        operands restaged."""
+        self._drain_tolerant()
+        if new_lease is None:
+            self._closed = True
+            self._lease = None
+            return 0
+        snapshots = self._snapshot_resident()
+        self._lease = new_lease
+        self._devices = list(new_lease.devices)
+        self._cluster_ids = tuple(new_lease.clusters)
+        self._drop_runtimes()
+        restaged = self._restage(snapshots)
         self._health.failovers += 1
         self._health.restages += restaged
         return restaged
+
+    def _suspend(self, drain_deadline: float = 0.0) -> int:
+        """Preemption callback from ``FabricScheduler.preempt``: drain
+        the in-flight window (the victim's drain budget is the §6-model
+        ``drain_deadline`` the scheduler computed; jobs that blow it trip
+        the fault ladder's ``CompletionTimeout`` and are absorbed like
+        any drain), snapshot resident state on the host, drop the
+        old-window runtimes, and suspend — every submit until
+        :meth:`_resume` raises.  Returns the snapshot count."""
+        self._drain_deadline = float(drain_deadline)
+        self._drain_tolerant()
+        self._preempt_snaps = self._snapshot_resident()
+        self._drop_runtimes()
+        self._suspended = True
+        return len(self._preempt_snaps)
+
+    def _resume(self, new_lease: ClusterLease) -> int:
+        """Re-placement callback: adopt the re-granted window, restage
+        the preemption snapshots through the broadcast tree they
+        originally rode, and reopen for submits.  Returns the number of
+        operands restaged — results after resume are bit-identical to an
+        unpreempted run (the ``preempt`` bench asserts it)."""
+        self._lease = new_lease
+        self._devices = list(new_lease.devices)
+        self._cluster_ids = tuple(new_lease.clusters)
+        self._suspended = False
+        restaged = self._restage(self._preempt_snaps)
+        self._preempt_snaps = []
+        self._health.restages += restaged
+        return restaged
+
+    def _close_revoked(self) -> None:
+        """Permanent revocation (``FabricScheduler.revoke``): the lease
+        is gone and will not be re-placed."""
+        self._preempt_snaps = []
+        self._suspended = False
+        self._closed = True
+        self._lease = None
+
+    def _inflight_launches(self) -> int:
+        """Launches currently in flight across the fused deque and every
+        open stream — the backlog term of the SLO backpressure model."""
+        return (len(self._fused_inflight)
+                + sum(len(s._inflight) for s in self._streams.values()))
+
+    def _slo_gate(self, est: Estimate, batch: int) -> None:
+        """Submit-side backpressure: when this session's lease belongs
+        to a tenant with a declared SLO, predict the submit's completion
+        — the in-flight backlog at the per-job pipeline period, plus the
+        batch itself on top of the first-launch latency — and shed with
+        a typed :class:`Overloaded` when it cannot fit, instead of
+        silently deepening the pipeline."""
+        lease = self._lease
+        if lease is None or lease.scheduler is None:
+            return
+        ten = lease.scheduler.tenant(lease.tenant)
+        if ten is None or ten.slo is None:
+            return
+        backlog = self._inflight_launches() * est.per_job_cycles
+        total = (backlog + est.job_cycles
+                 + est.staging_cycles.get("direct", 0.0)
+                 + max(0, batch - 1) * est.per_job_cycles)
+        if total > ten.slo:
+            raise Overloaded(
+                f"tenant {ten.name!r} slo={ten.slo:.0f} cycles < predicted "
+                f"completion {total:.0f} (backlog {backlog:.0f}); submit "
+                "shed — drain() and retry",
+                retry_after_cycles=backlog)
 
     def _drain_tolerant(self) -> None:
         """Drain in-flight work, absorbing completion trips (a failover

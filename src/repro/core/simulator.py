@@ -511,6 +511,34 @@ class TenantWorkload:
             raise ValueError(f"arrival must be >= 0, got {self.arrival}")
 
 
+@dataclasses.dataclass(frozen=True)
+class PreemptionEvent:
+    """A mid-stream lease revocation in the fabric contention model.
+
+    Once ``tenant`` has dispatched ``after_jobs`` jobs, its lease is
+    revoked: the in-flight window must fully *drain* (every dispatched
+    job resumes — the model analogue of the scheduler's drain deadline)
+    before the next dispatch, which then lands on ``new_clusters`` (the
+    re-placement window, possibly a degraded smaller one) after paying
+    ``restage_cycles`` (resident operands re-crossing to the new root).
+    """
+
+    tenant: str
+    after_jobs: int
+    new_clusters: tuple
+    restage_cycles: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.after_jobs < 1:
+            raise ValueError(
+                f"after_jobs must be >= 1, got {self.after_jobs}")
+        if not self.new_clusters:
+            raise ValueError("a re-placement needs at least one cluster")
+        if self.restage_cycles < 0:
+            raise ValueError(
+                f"restage_cycles must be >= 0, got {self.restage_cycles}")
+
+
 @dataclasses.dataclass
 class FabricSimResult:
     """Discrete-event outcome of a multi-tenant fabric schedule."""
@@ -519,6 +547,9 @@ class FabricSimResult:
     completion: Dict[str, float]         # tenant -> last job's resume end
     host_busy: float                     # cycles the shared host was occupied
     work: float                          # sum of ideal serial work (n=1 cycles)
+    # tenant -> every job's resume end, dispatch order (token latencies)
+    job_completions: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
 
     def utilization(self, num_clusters: int) -> float:
         """Useful-work fraction of the fabric: ideal serial cycles of the
@@ -549,8 +580,36 @@ def _workload_times(w: TenantWorkload, p: OccamyParams
     return t_host, t_dev, t_resume, work
 
 
+def _segment_table(w: TenantWorkload,
+                   preemptions: Sequence[PreemptionEvent],
+                   p: OccamyParams) -> List[tuple]:
+    """``w``'s job stream split at its preemption events:
+    ``(start_job, lease_key, t_dev, restage_cycles)`` per segment.  The
+    host legs (dispatch, resume) are window-size-invariant, so only the
+    device time is re-derived for a re-placement window."""
+    table = [(0, tuple(w.clusters), _workload_times(w, p)[1], 0.0)]
+    for e in sorted((e for e in preemptions if e.tenant == w.tenant),
+                    key=lambda e: e.after_jobs):
+        if e.after_jobs >= w.jobs or e.after_jobs <= table[-1][0]:
+            continue
+        seg_w = dataclasses.replace(w, clusters=tuple(e.new_clusters))
+        table.append((e.after_jobs, tuple(e.new_clusters),
+                      _workload_times(seg_w, p)[1], e.restage_cycles))
+    return table
+
+
+def _segment_at(table: List[tuple], job: int) -> tuple:
+    seg = table[0]
+    for entry in table:
+        if entry[0] <= job:
+            seg = entry
+    return seg
+
+
 def simulate_fabric(workloads: Sequence[TenantWorkload],
-                    params: OccamyParams = DEFAULT_PARAMS) -> FabricSimResult:
+                    params: OccamyParams = DEFAULT_PARAMS,
+                    preemptions: Sequence[PreemptionEvent] = ()
+                    ) -> FabricSimResult:
     """Discrete-event multi-tenant schedule over the shared host.
 
     Per tenant: dispatches are serial on the host and bounded by the
@@ -560,19 +619,30 @@ def simulate_fabric(workloads: Sequence[TenantWorkload],
     The host serves dispatch/resume requests in eligibility order (FIFO,
     resume preferred on ties so windows drain), exactly like the wide-port
     model above.
+
+    ``preemptions`` model revocable leases under contention: at each of a
+    tenant's :class:`PreemptionEvent` boundaries its in-flight window
+    must fully drain (every dispatched job resumes) before the next
+    dispatch, which pays the event's restage delay and lands on the
+    re-placement window — the timing shape of
+    ``FabricScheduler.preempt`` → drain → snapshot → re-place → restage.
     """
     if not workloads:
         raise ValueError("empty workload set")
     p = params
     times = [_workload_times(w, p) for w in workloads]
+    segs = [_segment_table(w, preemptions, p) for w in workloads]
     lease_free: Dict[tuple, float] = {}
     host_free = 0.0
     host_busy = 0.0
     dispatched = [0] * len(workloads)
     completed = [0] * len(workloads)
     last_host_end = [0.0] * len(workloads)
+    last_resume_end = [0.0] * len(workloads)
     dev_end: List[List[float]] = [[] for _ in workloads]
     completion: Dict[str, float] = {}
+    job_completions: Dict[str, List[float]] = {w.tenant: []
+                                               for w in workloads}
     total_jobs = sum(w.jobs for w in workloads)
     done = 0
     while done < total_jobs:
@@ -586,29 +656,42 @@ def simulate_fabric(workloads: Sequence[TenantWorkload],
             # next dispatch, if the window has room
             if (dispatched[k] < w.jobs
                     and dispatched[k] - completed[k] < max(1, w.window)):
-                cand = (max(w.arrival, last_host_end[k]), 1, k)
-                if best is None or cand < best:
-                    best = cand
+                seg = _segment_at(segs[k], dispatched[k])
+                boundary = (seg[0] == dispatched[k] and seg[0] > 0)
+                if boundary and completed[k] < dispatched[k]:
+                    pass        # drain gate: window must empty first
+                else:
+                    elig = max(w.arrival, last_host_end[k])
+                    if boundary:
+                        # the re-placement dispatch waits out the drain
+                        # and pays the operand restage
+                        elig = max(elig, last_resume_end[k] + seg[3])
+                    cand = (elig, 1, k)
+                    if best is None or cand < best:
+                        best = cand
         assert best is not None, "scheduler deadlock (window < 1?)"
         eligible, kind, k = best
         w = workloads[k]
-        t_host, t_dev, t_resume, _ = times[k]
+        t_host, _, t_resume, _ = times[k]
         start = max(host_free, eligible)
         if kind == 1:                               # dispatch
+            seg = _segment_at(segs[k], dispatched[k])
             host_free = start + t_host
             host_busy += t_host
             last_host_end[k] = host_free
-            key = tuple(w.clusters)
+            key = seg[1]
             dev_start = max(host_free, lease_free.get(key, 0.0))
-            lease_free[key] = dev_start + t_dev
-            dev_end[k].append(dev_start + t_dev)
+            lease_free[key] = dev_start + seg[2]
+            dev_end[k].append(dev_start + seg[2])
             dispatched[k] += 1
         else:                                       # resume (job collected)
             host_free = start + t_resume
             host_busy += t_resume
             completed[k] += 1
+            last_resume_end[k] = host_free
             completion[w.tenant] = max(completion.get(w.tenant, 0.0),
                                        host_free)
+            job_completions[w.tenant].append(host_free)
             done += 1
     # the declared span is first arrival -> last resume done; completion
     # times stay absolute (same clock as the arrivals)
@@ -616,21 +699,28 @@ def simulate_fabric(workloads: Sequence[TenantWorkload],
                 - min(w.arrival for w in workloads))
     work = sum(t[3] * w.jobs for t, w in zip(times, workloads))
     return FabricSimResult(makespan=makespan, completion=completion,
-                           host_busy=host_busy, work=work)
+                           host_busy=host_busy, work=work,
+                           job_completions=job_completions)
 
 
 def fabric_makespan_model(workloads: Sequence[TenantWorkload],
-                          params: OccamyParams = DEFAULT_PARAMS) -> float:
+                          params: OccamyParams = DEFAULT_PARAMS,
+                          preemptions: Sequence[PreemptionEvent] = ()
+                          ) -> float:
     """Closed-form makespan prediction — the §6 treatment extended to the
     multi-tenant fabric.  Three lower bounds, composed by max:
 
     * **tenant pipeline** — a tenant's jobs flow at the pipeline period
       ``max(t_host + t_resume, t_dev)`` (host leg hidden behind the
-      previous job's device phases once the window is open);
+      previous job's device phases once the window is open); each
+      preemption boundary adds a full drain-and-refill — the segment
+      tail (``t_dev + t_resume``), the restage delay, and a fresh
+      un-hidden host leg — on the segment's own window size;
     * **shared host** — every dispatch and resume serializes on the host,
       plus the shortest device tail after the last dispatch;
     * **shared lease** — workloads on an identical cluster selection
-      serialize their device phases (the whole-mesh baseline's bound).
+      serialize their device phases (the whole-mesh baseline's bound),
+      counted per segment under preemption.
 
     The second-order effects the discrete-event model resolves (host FIFO
     interleaving, window drain order) are deliberately dropped — the same
@@ -639,23 +729,32 @@ def fabric_makespan_model(workloads: Sequence[TenantWorkload],
     if not workloads:
         raise ValueError("empty workload set")
     times = [_workload_times(w, params) for w in workloads]
+    segs = [_segment_table(w, preemptions, params) for w in workloads]
     bounds = []
-    by_lease: Dict[tuple, List[int]] = {}
+    lease_work: Dict[tuple, float] = {}      # key -> summed device cycles
+    lease_first: Dict[tuple, float] = {}     # key -> earliest dispatch land
+    lease_tail: Dict[tuple, float] = {}      # key -> shortest resume leg
     for k, w in enumerate(workloads):
-        t_host, t_dev, t_resume, _ = times[k]
-        period = max(t_host + t_resume, t_dev)
-        bounds.append(w.arrival + t_host + (w.jobs - 1) * period
-                      + t_dev + t_resume)
-        by_lease.setdefault(tuple(w.clusters), []).append(k)
+        t_host, _, t_resume, _ = times[k]
+        table = segs[k]
+        bound = w.arrival
+        for i, (start, key, t_dev_s, restage) in enumerate(table):
+            jobs_s = (table[i + 1][0] if i + 1 < len(table)
+                      else w.jobs) - start
+            period = max(t_host + t_resume, t_dev_s)
+            bound += (restage + t_host + (jobs_s - 1) * period
+                      + t_dev_s + t_resume)
+            lease_work[key] = lease_work.get(key, 0.0) + jobs_s * t_dev_s
+            lease_first[key] = min(lease_first.get(key, float("inf")),
+                                   w.arrival + t_host)
+            lease_tail[key] = min(lease_tail.get(key, t_resume), t_resume)
+        bounds.append(bound)
     host_work = sum((times[k][0] + times[k][2]) * w.jobs
                     for k, w in enumerate(workloads))
     bounds.append(min(w.arrival for w in workloads) + host_work
-                  + min(t[1] for t in times))
-    for members in by_lease.values():
-        dev_work = sum(times[k][1] * workloads[k].jobs for k in members)
-        first = min(workloads[k].arrival + times[k][0] for k in members)
-        bounds.append(first + dev_work
-                      + min(times[k][2] for k in members))
+                  + min(min(s[2] for s in table) for table in segs))
+    for key, dev_work in lease_work.items():
+        bounds.append(lease_first[key] + dev_work + lease_tail[key])
     # same span convention as simulate_fabric: first arrival -> last done
     return max(bounds) - min(w.arrival for w in workloads)
 

@@ -719,6 +719,9 @@ class ServeTenant:
                 f"burst size {self.burst} below the floor {floor}")
         self.lease: ClusterLease = scheduler.request(
             Tenant(tenant, kind=TenantKind.SERVE), n=floor)
+        # the scheduler's overload ladder shrinks elastic serve leases
+        # (back to, then below, this floor) before revoking anything
+        scheduler.register_elastic(self.lease, floor)
         self._engines: Dict[Tuple[int, ...], ServeEngine] = {}
 
     def _engine(self) -> ServeEngine:
@@ -742,6 +745,12 @@ class ServeTenant:
         cur = self.scheduler.current_lease(self.lease)
         if cur is not None and cur is not self.lease:
             self.lease = cur
+        # overload pressure may have shrunk the floor itself (graceful
+        # degradation); adopt the scheduler's view so _grow/_shrink
+        # target the degraded floor instead of fighting the ladder
+        floor = self.scheduler.elastic_floor(self.lease)
+        if floor is not None and floor != self.floor:
+            self.floor = floor
 
     def _grow(self) -> None:
         self._sync()
@@ -760,8 +769,15 @@ class ServeTenant:
 
     def _shrink(self) -> None:
         self._sync()
-        if self.lease.n != self.floor:
+        if self.lease.n > self.floor:
             self.lease = self.scheduler.resize(self.lease, self.floor)
+        elif self.lease.n < self.floor:
+            # a failover or the overload ladder left the lease under the
+            # floor; growing back is best-effort while pressure persists
+            try:
+                self.lease = self.scheduler.resize(self.lease, self.floor)
+            except LeaseUnavailable:
+                pass
 
     def generate(self, prompts: np.ndarray, n_new: int,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None
@@ -806,5 +822,6 @@ class ServeTenant:
     def close(self) -> None:
         """Release the floor lease (the tenant leaves the fabric)."""
         self._sync()
+        self.scheduler.unregister_elastic(self.lease)
         if self.lease.active:
             self.lease.release()

@@ -37,7 +37,8 @@ EXPORTS = (
     "FabricScheduler", "FaultError", "FaultInjector", "FaultKind",
     "FaultPlan", "FaultSpec", "InfoDist", "JobHandle", "LeaseError",
     "LeaseUnavailable", "MulticastRequest", "OffloadConfig", "OffloadPolicy",
-    "OffloadRuntime", "PAPER_JOBS", "PaperJob", "PlanDecision", "PlanStats",
+    "OffloadRuntime", "Overloaded", "PAPER_JOBS", "PaperJob", "PendingLease",
+    "PlanDecision", "PlanStats",
     "Planner", "ReliableHandle", "Residency", "RetryPolicy",
     "SchedulerPolicy", "ServeConfig", "ServeEngine", "ServeTenant",
     "Session", "SessionHandle", "SessionHealth", "Staging", "StepWatchdog",
@@ -91,10 +92,18 @@ SNAPSHOT = {
     "FabricScheduler.resize": ("lease", "n"),
     "FabricScheduler.session": ("tenant", "n=", "clusters=", "job=",
                                 "batch=", "**session_kwargs"),
+    "FabricScheduler.preempt": ("lease", "queue="),
+    "FabricScheduler.revoke": ("lease",),
+    "FabricScheduler.cancel": ("pending",),
+    "FabricScheduler.compact": ("max_moves=",),
+    "FabricScheduler.drain_deadline": ("lease",),
+    "FabricScheduler.predict_retry_after": ("job=", "batch="),
     "ClusterLease": ("lease_id", "tenant", "clusters", "scheduler="),
     "ClusterLease.requests": (),
-    "Tenant": ("name", "kind=", "weight="),
-    "SchedulerPolicy": ("placement=", "align=", "share_slack="),
+    "Tenant": ("name", "kind=", "weight=", "slo=", "priority="),
+    "SchedulerPolicy": ("placement=", "align=", "share_slack=",
+                        "preemption=", "max_queue_depth=", "aging_grants="),
+    "Overloaded": ("message", "retry_after_cycles="),
     "ServeTenant": ("scheduler", "cfg", "host_params", "scfg", "tenant=",
                     "floor=", "burst=", "call="),
     "ServeTenant.generate": ("prompts", "n_new", "extra_inputs="),

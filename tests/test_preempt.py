@@ -1,0 +1,448 @@
+"""Overload-robust fabric (ISSUE-7): revocable leases, SLO admission,
+graceful degradation, and the satellites riding along — backfill-aging
+starvation bound, ``cancel()`` error paths, the completion-unit
+cancel-vs-deferred-replay race, preemption contention in the simulator,
+and chaos composition of fault plans."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import jobs, simulator
+from repro.core.completion import CompletionUnit
+from repro.core.fabric import (
+    FabricScheduler,
+    LeaseError,
+    Overloaded,
+    PendingLease,
+    SchedulerPolicy,
+    Tenant,
+)
+from repro.core.faults import FaultKind, FaultPlan, FaultSpec
+from repro.core.policy import TenantKind
+from repro.core.simulator import (
+    PreemptionEvent,
+    TenantWorkload,
+    fabric_makespan_model,
+    simulate_fabric,
+)
+
+
+# ---------------------------------------------------------------------------
+# Tenant / SchedulerPolicy vocabulary
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_slo_priority_validation():
+    t = Tenant("t", weight=2.0, slo=1000.0, priority=1)
+    assert t.slo == 1000.0 and t.priority == 1
+    with pytest.raises(ValueError, match="slo"):
+        Tenant("t", slo=0.0)
+    with pytest.raises(ValueError, match="slo"):
+        Tenant("t", slo=-5.0)
+
+
+def test_scheduler_policy_overload_knobs_validated():
+    pol = SchedulerPolicy(preemption="priority", max_queue_depth=2,
+                          aging_grants=3)
+    assert pol.preemption == "priority"
+    with pytest.raises(ValueError, match="preemption"):
+        SchedulerPolicy(preemption="sometimes")
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        SchedulerPolicy(max_queue_depth=-1)
+    with pytest.raises(ValueError, match="aging_grants"):
+        SchedulerPolicy(aging_grants=0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: backfill starvation — aging + head reservation
+# ---------------------------------------------------------------------------
+
+
+def test_backfill_aging_bounds_starvation():
+    """A blocked big request is bypassed at most ``aging_grants`` times;
+    after that it reserves the fabric and freed capacity accrues to it."""
+    sched = FabricScheduler(num_clusters=8,
+                            policy=SchedulerPolicy(aging_grants=2))
+    holds = [sched.request("hold0", clusters=[0, 1, 2, 3]),
+             sched.request("hold1", clusters=[4, 5, 6, 7])]
+    big = sched.request(Tenant("big"), n=8, queue=True)
+    smalls = [sched.request(Tenant(f"s{k}"), n=4, queue=True)
+              for k in range(3)]
+
+    sched.release(holds[0])          # small0 backfills past blocked big
+    assert smalls[0].ready and not big.ready and big.skipped == 1
+    sched.release(smalls[0].lease)   # small1 backfills: second bypass
+    assert smalls[1].ready and big.skipped == 2
+    sched.release(smalls[1].lease)   # aged out: the head reserves now
+    assert not smalls[2].ready, (
+        "backfill past an aged head must stop (head reservation)")
+    assert not big.ready
+    sched.release(holds[1])          # full fabric free -> the big grant
+    assert big.ready and big.lease.n == 8
+    assert not smalls[2].ready       # still behind the big lease
+    sched.release(big.lease)
+    assert smalls[2].ready
+
+
+def test_direct_grants_prefer_queue_order_after_release():
+    """Weighted ranking: a heavier queued tenant grants first even when
+    queued later (weight beats FIFO inside a priority class)."""
+    sched = FabricScheduler(num_clusters=4)
+    hold = sched.request("hold", n=4)
+    light = sched.request(Tenant("light", weight=1.0), n=4, queue=True)
+    heavy = sched.request(Tenant("heavy", weight=8.0), n=4, queue=True)
+    sched.release(hold)
+    assert heavy.ready and not light.ready
+
+
+# ---------------------------------------------------------------------------
+# Satellite: cancel() — withdraw a queued request
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_removes_queued_request_and_unblocks():
+    sched = FabricScheduler(num_clusters=4,
+                            policy=SchedulerPolicy(aging_grants=1))
+    hold = sched.request("hold", n=4)
+    big = sched.request(Tenant("big"), n=4, queue=True)
+    small = sched.request(Tenant("small"), n=2, queue=True)
+    sched.cancel(big)
+    assert big.cancelled and big not in sched.pending
+    sched.release(hold)
+    assert small.ready        # the cancelled head no longer reserves
+
+
+def test_cancel_error_paths():
+    sched = FabricScheduler(num_clusters=4)
+    hold = sched.request("hold", n=4)
+    pend = sched.request(Tenant("t"), n=2, queue=True)
+    # cancelling twice: second is a LeaseError
+    sched.cancel(pend)
+    with pytest.raises(LeaseError, match="not queued"):
+        sched.cancel(pend)
+    # a granted pending must be released, not cancelled
+    pend2 = sched.request(Tenant("t2"), n=2, queue=True)
+    sched.release(hold)
+    assert pend2.ready
+    with pytest.raises(LeaseError, match="already granted"):
+        sched.cancel(pend2)
+    # a foreign PendingLease was never queued here
+    foreign = PendingLease("x", 2, None, None, 1)
+    with pytest.raises(LeaseError, match="not queued"):
+        sched.cancel(foreign)
+
+
+# ---------------------------------------------------------------------------
+# SLO admission: typed Overloaded backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_queue_depth_sheds_with_typed_overloaded():
+    sched = FabricScheduler(num_clusters=4,
+                            policy=SchedulerPolicy(max_queue_depth=1))
+    sched.request("hold", n=4, job=jobs.make_axpy(1024))
+    sched.request(Tenant("q0"), n=4, queue=True)
+    with pytest.raises(Overloaded) as exc:
+        sched.request(Tenant("q1"), n=4, queue=True)
+    assert exc.value.retry_after_cycles > 0.0
+    assert sched.health().overloaded == 1
+
+
+def test_slo_violation_sheds_instead_of_queueing():
+    sched = FabricScheduler(num_clusters=4)
+    sched.request("hold", n=4, job=jobs.make_axpy(1024))
+    job = jobs.make_covariance(32, 64)
+    tight = Tenant("tight", slo=1.0)
+    with pytest.raises(Overloaded) as exc:
+        sched.request(tight, n=4, job=job, queue=True)
+    assert exc.value.retry_after_cycles > 0.0
+    # a generous SLO queues fine
+    ok = sched.request(Tenant("ok", slo=1e12), n=4, job=job, queue=True)
+    assert isinstance(ok, PendingLease)
+    assert sched.health().overloaded == 1
+
+
+def test_session_slo_gate_rejects_predictably_slow_submit(subproc):
+    subproc("""
+import jax
+from repro.api import FabricScheduler, Overloaded, Session, Tenant
+from repro.core import jobs
+
+job = jobs.make_covariance(32, 64)
+sched = FabricScheduler(jax.devices())
+lease = sched.request(Tenant("tight", slo=10.0), clusters=[0, 1])
+sess = Session(lease=lease)
+ops, _ = job.make_instance(0)
+try:
+    sess.submit(job, dict(ops), n=2)
+    raise SystemExit("expected Overloaded")
+except Overloaded as e:
+    assert e.retry_after_cycles >= 0.0
+sess.close()
+
+sched = FabricScheduler(jax.devices())
+lease = sched.request(Tenant("ok", slo=1e12), clusters=[0, 1])
+sess = Session(lease=lease)
+out = sess.submit(job, dict(ops), n=2).wait()
+assert out is not None
+sess.close()
+print("OK")
+""", devices=4)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: preempt / revoke lifecycle (model-only)
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_queues_and_regrants_same_lease_id():
+    sched = FabricScheduler(num_clusters=8)
+    victim = sched.request(Tenant("victim"), clusters=[0, 1, 2, 3],
+                           job=jobs.make_axpy(1024))
+    blocker = sched.request("blocker", clusters=[4, 5, 6, 7])
+    taker = sched.request(Tenant("taker", weight=8.0), n=4, queue=True)
+    deadline = sched.drain_deadline(victim)
+    assert deadline > 0.0
+    pend = sched.preempt(victim)
+    assert sched.health().preemptions == 1
+    assert taker.ready, "the freed window goes to the queued tenant"
+    assert not pend.ready and pend.resume_id == victim.lease_id
+    assert sched.current_lease(victim) is None
+    sched.release(blocker)
+    assert pend.ready
+    assert pend.lease.lease_id == victim.lease_id
+    assert pend.lease.clusters == (4, 5, 6, 7)
+
+
+def test_preempt_drain_deadline_is_model_driven():
+    """deadline = deadline_factor x predict_makespan(job, window, batch)."""
+    from repro.core.faults import deadline_cycles
+    from repro.core.policy import RetryPolicy
+
+    job = jobs.make_covariance(32, 64)
+    sched = FabricScheduler(num_clusters=8)
+    lease = sched.request(Tenant("t"), n=4, job=job, batch=3)
+    expect = deadline_cycles(
+        sched.predict_makespan(job, lease.clusters, 3), RetryPolicy())
+    assert sched.drain_deadline(lease) == pytest.approx(expect)
+
+
+def test_revoke_ends_lease_permanently():
+    sched = FabricScheduler(num_clusters=4)
+    lease = sched.request(Tenant("t"), n=2)
+    sched.revoke(lease)
+    assert sched.current_lease(lease) is None
+    assert sched.pending == ()            # no re-queue
+    assert sched.health().preemptions == 1
+    with pytest.raises(LeaseError, match="not active"):
+        sched.preempt(lease)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: compaction and the degradation ladder (model-only)
+# ---------------------------------------------------------------------------
+
+
+def test_compact_coalesces_free_capacity():
+    sched = FabricScheduler(num_clusters=8)
+    a = sched.request("a", clusters=[0, 1])
+    b = sched.request("b", clusters=[4, 5])
+    with pytest.raises(LeaseError):
+        sched.request("big", n=4)
+    moves = sched.compact()
+    assert moves == 1 and sched.health().migrations == 1
+    assert sched.current_lease(b).clusters == (2, 3)
+    assert sched.current_lease(a).clusters == (0, 1)
+    big = sched.request("big", n=4)
+    assert big.clusters == (4, 5, 6, 7)
+
+
+def test_pressure_ladder_shrinks_elastic_floor_before_revoking():
+    sched = FabricScheduler(
+        num_clusters=8, policy=SchedulerPolicy(preemption="priority"))
+    serve = sched.request(Tenant("serve", kind=TenantKind.SERVE), n=4)
+    sched.register_elastic(serve, floor=2)
+    other = sched.request(Tenant("other"), clusters=[4, 5, 6, 7])
+    # no free window; the ladder shrinks serve to its floor, not revoke
+    lease = sched.request(Tenant("t", priority=1), n=2)
+    assert lease.n == 2
+    assert sched.current_lease(serve).n == 2
+    assert sched.health().preemptions == 0
+    assert sched.health().floor_shrinks == 0
+    assert sched.current_lease(other) is not None
+    assert sched.elastic_floor(sched.current_lease(serve)) == 2
+
+
+def test_pressure_ladder_halves_floors_then_preempts():
+    sched = FabricScheduler(
+        num_clusters=8, policy=SchedulerPolicy(preemption="priority"))
+    serve = sched.request(Tenant("serve", kind=TenantKind.SERVE), n=4)
+    sched.register_elastic(serve, floor=4)       # already at its floor
+    low = sched.request(Tenant("low", priority=0), clusters=[4, 5, 6, 7])
+    # rung 2b halves the floor (4 -> 2), freeing a 2-window
+    l1 = sched.request(Tenant("hi", priority=1), n=2)
+    assert l1.n == 2 and sched.health().floor_shrinks == 1
+    assert sched.elastic_floor(sched.current_lease(serve)) == 2
+    # nothing left to shrink for a 4-window: the low-priority lease is
+    # revoked (elastic serve leases are never victims)
+    l2 = sched.request(Tenant("hi", priority=1), n=4)
+    assert l2.clusters == (4, 5, 6, 7)
+    assert sched.health().preemptions == 1
+    assert sched.current_lease(low) is None
+    assert any(p.resume_id is not None for p in sched.pending)
+    assert sched.current_lease(serve) is not None
+
+
+def test_degraded_grant_takes_model_equal_smaller_window():
+    """A request whose job is as fast on half the clusters degrades to
+    the smaller pow2 window instead of revoking anything."""
+    job = jobs.make_covariance(32, 64)       # 8-wide beats 16-wide
+    sched = FabricScheduler(
+        num_clusters=32, policy=SchedulerPolicy(preemption="priority"))
+    low = sched.request(Tenant("low", priority=0), n=16,
+                        job=jobs.make_axpy(1024))
+    sched.request(Tenant("pad", priority=0), n=8)
+    lease = sched.request(Tenant("hi", priority=1), n=16, job=job, batch=4)
+    assert lease.n < 16
+    assert sched.health().degraded_grants == 1
+    assert sched.health().preemptions == 0
+    assert sched.current_lease(low) is not None
+
+
+def test_preempted_victims_cannot_starve_forever():
+    """A revoked lease's re-queue entry competes with weighted aging like
+    any other pending request and eventually re-places."""
+    sched = FabricScheduler(
+        num_clusters=8, policy=SchedulerPolicy(preemption="priority"))
+    victim = sched.request(Tenant("victim", priority=0), n=8,
+                           job=jobs.make_axpy(1024))
+    hi = sched.request(Tenant("hi", priority=1), n=8,
+                       job=jobs.make_axpy(1024))
+    assert sched.health().preemptions == 1
+    pend = next(p for p in sched.pending
+                if p.resume_id == victim.lease_id)
+    sched.release(hi)
+    assert pend.ready and pend.lease.lease_id == victim.lease_id
+
+
+# ---------------------------------------------------------------------------
+# Satellite: CompletionUnit.cancel racing the deferred-IRQ replay
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_purges_pending_irq_of_completed_job():
+    cu = CompletionUnit(n_units=2)
+    cu.program(1, job_id=0)
+    cu.arrive(job_id=0)                  # fires: pending cause 0
+    assert cu.pending_cause() == 0
+    cu.cancel(0)                         # raced: completion already fired
+    assert cu.pending_cause() is None, (
+        "a cancelled job's fired IPI must not stay pending")
+    # the unit is reusable for the next job sharing it (2 % 2 == 0)
+    cu.program(1, job_id=2)
+    cu.arrive(job_id=2)
+    cu.collect(2)                        # must see 2, never the stale 0
+
+
+def test_cancel_purges_deferred_replay_of_completed_job():
+    """Fig. 6 replay race: B completes while A's IPI is pending, so B's
+    cause sits in the deferred list; cancelling B must purge it, or the
+    replay fires a stale interrupt for a later job on B's unit."""
+    cu = CompletionUnit(n_units=2)
+    cu.program(1, job_id=0)
+    cu.program(1, job_id=1)
+    cu.arrive(job_id=0)                  # A pending
+    cu.arrive(job_id=1)                  # B fired -> deferred behind A
+    cu.cancel(1)                         # abandon B after its completion
+    assert cu.clear() == 0               # A's IPI
+    assert cu.pending_cause() is None, (
+        "cancelled B's deferred completion replayed as a stale IPI")
+    # job 3 shares B's unit; its completion must be the only cause seen
+    cu.program(1, job_id=3)
+    cu.arrive(job_id=3)
+    cu.collect(3)
+    assert cu.pending_cause() is None
+
+
+def test_cancel_purges_collected_cause():
+    cu = CompletionUnit(n_units=1)
+    cu.program(1, job_id=0)
+    cu.arrive(job_id=0)
+    cu.program(1, job_id=1)
+    cu.arrive(job_id=1)
+    cu.collect(1)                        # parks cause 0 in _collected
+    cu.cancel(0)
+    cu.program(1, job_id=0)
+    cu.arrive(job_id=0)
+    cu.collect(0)                        # fresh completion, not the stale park
+    assert cu.pending_cause() is None
+
+
+# ---------------------------------------------------------------------------
+# Simulator: preemption contention events
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_event_validation():
+    with pytest.raises(ValueError, match="after_jobs"):
+        PreemptionEvent("t", after_jobs=0, new_clusters=(0,))
+    with pytest.raises(ValueError, match="cluster"):
+        PreemptionEvent("t", after_jobs=1, new_clusters=())
+    with pytest.raises(ValueError, match="restage_cycles"):
+        PreemptionEvent("t", after_jobs=1, new_clusters=(0,),
+                        restage_cycles=-1.0)
+
+
+def test_simulated_preemption_drains_and_delays():
+    """A preemption boundary strictly delays the tenant's completion
+    (drain + restage + re-placement) and the closed form tracks the
+    event model within the paper bar."""
+    spec = jobs.make_covariance(32, 64).spec
+    w = TenantWorkload("t", spec, tuple(range(8)), jobs=8)
+    base = simulate_fabric([w])
+    ev = PreemptionEvent("t", after_jobs=4, new_clusters=tuple(range(8, 12)),
+                         restage_cycles=5_000.0)
+    out = simulate_fabric([w], preemptions=[ev])
+    assert out.makespan > base.makespan
+    assert len(out.job_completions["t"]) == 8
+    pred = fabric_makespan_model([w], preemptions=[ev])
+    assert simulator.model_error(pred, out.makespan) < 0.15
+    # completions stay monotonic across the boundary
+    cs = out.job_completions["t"]
+    assert all(a < b for a, b in zip(cs, cs[1:]))
+
+
+def test_preemption_event_ignored_outside_job_range():
+    spec = jobs.make_axpy(1024).spec
+    w = TenantWorkload("t", spec, tuple(range(4)), jobs=3)
+    ev = PreemptionEvent("t", after_jobs=3, new_clusters=(4, 5))
+    assert (simulate_fabric([w], preemptions=[ev]).makespan
+            == simulate_fabric([w]).makespan)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: chaos composition of fault plans
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_compose_merges_and_orders():
+    a = FaultPlan([FaultSpec(FaultKind.STRAGGLE, at_dispatch=3, factor=2.0)])
+    b = FaultPlan([FaultSpec(FaultKind.LOST_ARRIVAL, at_dispatch=0, count=1),
+                   FaultSpec(FaultKind.CLUSTER_DEATH, at_dispatch=5,
+                             clusters=(1,))])
+    merged = a.compose(b)
+    assert [f.at_dispatch for f in merged] == [0, 3, 5]
+    assert len(a) == 1 and len(b) == 2          # inputs untouched
+    via_add = a + b
+    assert [f.at_dispatch for f in via_add] == [0, 3, 5]
+    with pytest.raises(TypeError):
+        a + 42          # not a FaultPlan
+
+
+def test_fault_plan_compose_deterministic_with_random():
+    a = FaultPlan.random(11, n_faults=2)
+    b = FaultPlan.random(22, n_faults=2)
+    assert ([f.at_dispatch for f in a.compose(b)]
+            == [f.at_dispatch for f in a.compose(b)])
+    assert dataclasses.astuple(a.compose(b).faults[0]) is not None
