@@ -17,6 +17,7 @@ typecheck:
 	@if $(PYTHON) -c "import mypy" 2>/dev/null; then \
 		$(PYTHON) -m mypy --config-file mypy.ini \
 			src/repro/api.py src/repro/core/policy.py src/repro/core/fabric.py \
+			src/repro/core/scoreboard.py \
 			src/repro/core/faults.py src/repro/core/session.py \
 			src/repro/serve/engine.py src/repro/ft/; \
 	else \
@@ -25,11 +26,11 @@ typecheck:
 
 bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-		$(PYTHON) -m benchmarks.run --only fig07,fig12,staging,session,scheduler,faults,preempt --check BENCH_offload.json
+		$(PYTHON) -m benchmarks.run --only fig07,fig12,staging,session,scheduler,faults,preempt,dag --check BENCH_offload.json
 
 # The tracked dispatch-overhead trajectory (writes BENCH_offload.json).
 bench-offload:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PYTHON) -m benchmarks.run \
-			--only offload,stream,serve_stream,staging,staging_wall,session,scheduler,faults,preempt,fig07,fig09,fig12 \
+			--only offload,stream,serve_stream,staging,staging_wall,session,scheduler,faults,preempt,dag,fig07,fig09,fig12 \
 			--json BENCH_offload.json

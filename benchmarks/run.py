@@ -65,11 +65,13 @@ SUITES = {
               "model error",
     "preempt": "overload ladder: churn replay, p99/utilization under "
                "preemption, bit-exact preempt/resume",
+    "dag": "dependent job graphs: chain latency vs critical path, 0-byte "
+           "intermediate d2h, diamond overlap",
 }
 
 #: suites the CI bench-smoke gate runs (`make bench-smoke` / ci.yml)
 CI_SUITES = ("fig07", "fig12", "staging", "session", "scheduler", "faults",
-             "preempt")
+             "preempt", "dag")
 
 #: row-name fragments excluded from --check (compile-dominated, unbounded noise)
 CHECK_SKIP = ("/cold", "/error", "unix_time")
@@ -202,6 +204,7 @@ def main() -> None:
             ap.error(f"unknown suite(s) {', '.join(unknown)}; valid: "
                      f"{', '.join(SUITES)} (see --list)")
 
+    from benchmarks.dag_bench import dag_suite
     from benchmarks.faults_bench import faults_suite
     from benchmarks.kernel_bench import kernel_table
     from benchmarks.offload_wallclock import (
@@ -224,6 +227,7 @@ def main() -> None:
     suites["scheduler"] = scheduler_suite
     suites["faults"] = faults_suite
     suites["preempt"] = preempt_suite
+    suites["dag"] = dag_suite
     missing = sorted(set(suites) ^ set(SUITES))
     assert not missing, f"suite registry out of sync: {missing}"
     if keep is not None:

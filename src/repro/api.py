@@ -14,7 +14,10 @@ deadlines, and the resubmit → backup-window → lease-failover escalation
 ladder; README "Fault tolerance"), and the overload substrate
 (revocable leases via :meth:`FabricScheduler.preempt`, SLO admission
 with the typed :class:`Overloaded` error, and the graceful-degradation
-ladder; README "Preemption & overload").
+ladder; README "Preemption & overload"), and dependent job graphs
+(:meth:`Session.submit_graph` over :class:`GraphNode`/:class:`Ref` —
+scoreboarded out-of-order dispatch with device-to-device result
+forwarding; README "Dependent job graphs").
 
 Quickstart::
 
@@ -61,6 +64,7 @@ from repro.core.faults import (
 from repro.core.jobs import PAPER_JOBS, PaperJob, make_instances
 from repro.core.multicast import MulticastRequest
 from repro.core.offload import (
+    DonatedOperandError,
     JobHandle,
     OffloadConfig,
     OffloadRuntime,
@@ -76,9 +80,16 @@ from repro.core.policy import (
     Staging,
     TenantKind,
 )
+from repro.core.scoreboard import (
+    GraphError,
+    GraphNode,
+    Ref,
+    Scoreboard,
+)
 from repro.core.session import (
     Estimate,
     Explain,
+    GraphHandle,
     PlanDecision,
     Planner,
     ReliableHandle,
@@ -96,6 +107,7 @@ __all__ = [
     "ClusterLease",
     "Completion",
     "CompletionTimeout",
+    "DonatedOperandError",
     "Estimate",
     "Explain",
     "FabricHealth",
@@ -105,6 +117,9 @@ __all__ = [
     "FaultKind",
     "FaultPlan",
     "FaultSpec",
+    "GraphError",
+    "GraphHandle",
+    "GraphNode",
     "InfoDist",
     "JobHandle",
     "LeaseError",
@@ -120,10 +135,12 @@ __all__ = [
     "PlanDecision",
     "PlanStats",
     "Planner",
+    "Ref",
     "ReliableHandle",
     "Residency",
     "RetryPolicy",
     "SchedulerPolicy",
+    "Scoreboard",
     "ServeConfig",
     "ServeEngine",
     "ServeTenant",

@@ -253,6 +253,40 @@ class TreeStager:
             arr.shape, sharding, [bufs[c] for c in self._order])
 
 
+    def forward_replicated(self, value, sharding,
+                           *, stats: Optional[Any] = None):
+        """Fan a *device-resident* producer result out replicated — the
+        forwarding counterpart of :meth:`put_replicated`.
+
+        ``value`` is a jax array living on the fabric (a dependent job's
+        producer output, possibly still in flight — async dispatch chains
+        the copies behind it).  It hops device-to-device to the tree root
+        and then rides the same levelled fan-out; the host link is never
+        touched, so ``stats.h2d_bytes`` stays put and the whole
+        ``n * nbytes`` logical movement lands in ``stats.forward_bytes``
+        (and ``d2d_bytes`` — forwarding is fan-out traffic too).
+        """
+        n = len(self._order)
+        nbytes = int(value.nbytes)
+        root_dev = self._dev[self.tree.root]
+        buf = jax.device_put(value, root_dev)
+        if stats is not None:
+            stats.forward_bytes += nbytes * n
+            stats.d2d_bytes += nbytes * n
+        if n == 1:
+            return jax.make_array_from_single_device_arrays(
+                tuple(value.shape), sharding, [buf])
+        bufs = {self.tree.root: buf}
+        for level in self.tree.levels:
+            srcs = [bufs[s] for s, _ in level]
+            dsts = [self._dev[d] for _, d in level]
+            out = jax.device_put(srcs, dsts)
+            for (_, d), b in zip(level, out):
+                bufs[d] = b
+        return jax.make_array_from_single_device_arrays(
+            tuple(value.shape), sharding, [bufs[c] for c in self._order])
+
+
 def is_replicated(sharding) -> bool:
     """True iff ``sharding`` places the full array on every device."""
     spec = getattr(sharding, "spec", None)

@@ -61,6 +61,7 @@ from repro.core import multicast as mc
 from repro.core import simulator
 from repro.core.params import DEFAULT_PARAMS, OccamyParams
 from repro.core.policy import TenantKind
+from repro.core.scoreboard import GraphError
 
 #: replicated-operand footprint assumed when a lease request names no job —
 #: placement still prefers quadrant-local windows over straddling ones
@@ -1144,3 +1145,29 @@ class FabricScheduler:
                              batch=batch)
         from repro.core.session import Session
         return Session(lease=lease, params=self.params, **session_kwargs)
+
+    def submit_graph(self, nodes: Sequence[Any], *,
+                     policy: Any = None) -> Any:
+        """Dispatch a dependency graph spanning this fabric's leases.
+
+        Each node names the session (and thereby the lease window) it
+        dispatches through via ``GraphNode.session`` — typically one
+        session per lease from :meth:`session`; nodes leaving it unset
+        run on the first named session.  Delegates to
+        :meth:`Session.submit_graph <repro.core.session.Session.submit_graph>`
+        on that driver, which issues independent sub-DAGs concurrently
+        across the leases' in-flight windows and forwards producer
+        results device-to-device between their fabric windows (the
+        cross-lease reshard counted per edge in
+        ``GraphHandle.forwarded``).
+        """
+        nodes = list(nodes)
+        if not nodes:
+            raise GraphError("empty graph")
+        driver = next((nd.session for nd in nodes
+                       if getattr(nd, "session", None) is not None), None)
+        if driver is None:
+            raise GraphError(
+                "a fabric-level graph names at least one node's session= "
+                "(open one per lease with FabricScheduler.session)")
+        return driver.submit_graph(nodes, policy=policy)

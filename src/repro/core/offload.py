@@ -230,6 +230,10 @@ class PlanStats:
     h2d_bytes: int = 0            # logical host-link bytes (see broadcast.py)
     d2d_bytes: int = 0            # logical device-to-device fan-out bytes
     tree_stages: int = 0          # operand/arg stagings routed via the tree
+    d2h_bytes: int = 0            # result payload fetched to host by wait()
+    forwards: int = 0             # operands forwarded from producer results
+    forward_bytes: int = 0        # logical d2d bytes of those forwards
+    renames: int = 0              # rename copies breaking WAR/WAW hazards
 
     def accumulate(self, other: "PlanStats") -> "PlanStats":
         """Add ``other``'s counters into this instance (returns self) —
@@ -238,6 +242,40 @@ class PlanStats:
             setattr(self, f.name,
                     getattr(self, f.name) + getattr(other, f.name))
         return self
+
+
+class DonatedOperandError(RuntimeError):
+    """A device buffer was reused after a donating dispatch consumed it.
+
+    Donation (``OffloadConfig.donate_operands``) hands the operand
+    buffers to XLA, which deletes them on launch.  Reusing one —
+    re-staging it, forwarding it to a dependent job, or fetching a
+    result whose buffer a later donating consumer swallowed — used to
+    surface as an opaque substrate error deep inside ``device_put`` /
+    ``device_get``.  This typed error names the operand and the remedy
+    instead (restage from host, or let the graph dispatcher *rename* —
+    copy — the buffer before the donating consumer).
+    """
+
+    def __init__(self, what: str):
+        super().__init__(
+            f"{what} was deleted by a donating dispatch; restage it from "
+            "the host copy (plan.resident_operands restores resident "
+            "buffers automatically) or disable donate_operands for "
+            "buffers that must stay readable")
+
+
+def _check_live(value: Any, what: str) -> Any:
+    """Raise the typed donation error for a deleted jax buffer."""
+    if getattr(value, "is_deleted", None) is not None and value.is_deleted():
+        raise DonatedOperandError(what)
+    return value
+
+
+def _nbytes_of(data: Any) -> int:
+    """Host bytes of a fetched result (arrays or pytrees of them)."""
+    return sum(int(getattr(leaf, "nbytes", 0))
+               for leaf in jax.tree_util.tree_leaves(data))
 
 
 @dataclasses.dataclass
@@ -251,9 +289,45 @@ class JobHandle:
     dispatched_at: float
     runtime: "OffloadRuntime"
     cluster_ids: Tuple[int, ...] = ()
+    plan: Optional["DispatchPlan"] = None
     _data: Any = None
     _done: bool = False
+    _retired: bool = False
     _fault: Optional[CompletionTimeout] = None
+
+    def _complete(self, arrivals: int) -> None:
+        """Feed the completion unit, resolving any injected fault."""
+        inj = self.runtime.fault_injector
+        lost = (inj.lost_arrivals(self.runtime, self.job_id)
+                if inj is not None else 0)
+        if lost:
+            self.runtime.unit.arrive(self.job_id, arrivals - lost)
+            missing = self.runtime.unit.cancel(self.job_id)
+            self.result = self.arrivals = None
+            self._fault = CompletionTimeout(self.job_id, missing,
+                                            self.cluster_ids)
+            raise self._fault
+        self.runtime.unit.arrive(self.job_id, arrivals)
+        self.runtime.unit.collect(self.job_id)
+        self._retired = True
+
+    def retire(self) -> None:
+        """Collect *completion only*, leaving the result on the fabric.
+
+        Fetches the arrivals scalar (a host-side doorbell read, not the
+        result payload), feeds the completion unit, and frees this job's
+        unit copy — ``stats.d2h_bytes`` does not grow.  The graph
+        dispatcher retires intermediate nodes this way: their results are
+        forwarded device-to-device to consumers and never fetched.
+        Idempotent; ``wait()`` after ``retire()`` fetches only the data.
+        """
+        if self._fault is not None:
+            raise self._fault
+        if self._retired or self._done:
+            return
+        arrivals = jax.device_get(self.arrivals)
+        self._complete(int(arrivals))
+        self.arrivals = None
 
     def wait(self) -> Any:
         """Block until complete; feeds the completion unit and returns data.
@@ -263,6 +337,10 @@ class JobHandle:
         :meth:`CompletionUnit.collect` — handles may be waited on in any
         order relative to dispatch (the number of *outstanding* jobs is
         bounded by the runtime's ``n_units``, as in the paper's fig. 6).
+        Idempotent: a second call returns the cached result without
+        touching the device or the completion unit again.  The result
+        payload's bytes are counted in the plan's ``stats.d2h_bytes`` —
+        the counter proving graph intermediates never take this path.
 
         Under fault injection, a dispatch whose arrivals were dropped
         raises :class:`~repro.core.faults.CompletionTimeout` instead:
@@ -275,19 +353,14 @@ class JobHandle:
             raise self._fault
         if self._done:
             return self._data
-        data, arrivals = jax.device_get((self.result, self.arrivals))
-        inj = self.runtime.fault_injector
-        lost = (inj.lost_arrivals(self.runtime, self.job_id)
-                if inj is not None else 0)
-        if lost:
-            self.runtime.unit.arrive(self.job_id, int(arrivals) - lost)
-            missing = self.runtime.unit.cancel(self.job_id)
-            self.result = self.arrivals = None
-            self._fault = CompletionTimeout(self.job_id, missing,
-                                            self.cluster_ids)
-            raise self._fault
-        self.runtime.unit.arrive(self.job_id, int(arrivals))
-        self.runtime.unit.collect(self.job_id)
+        _check_live(self.result, f"job {self.job_id}'s result buffer")
+        if self._retired:
+            data = jax.device_get(self.result)
+        else:
+            data, arrivals = jax.device_get((self.result, self.arrivals))
+            self._complete(int(arrivals))
+        if self.plan is not None:
+            self.plan.stats.d2h_bytes += _nbytes_of(data)
         self._data, self._done = data, True
         self.result = self.arrivals = None   # drop device refs
         return data
@@ -446,7 +519,8 @@ class DispatchPlan:
         staged = {}
         donating = self.runtime.config.donate_operands
         for name, shape, dtype in self.op_meta:
-            arr = np.asarray(operands[name])
+            arr = np.asarray(_check_live(operands[name],
+                                         f"staged operand {name!r}"))
             if tuple(arr.shape) != shape:
                 raise ValueError(
                     f"operand {name} shape {arr.shape} != planned {shape}")
@@ -472,6 +546,98 @@ class DispatchPlan:
             # operands, so a donated dispatch consuming them needs no redo
             self._slots[slot] = staged
         return staged
+
+    def forward(self, name: str, value: Any, *,
+                rename: bool = False) -> Tuple[Any, int]:
+        """Stage operand ``name`` from a *device-resident* producer result.
+
+        The device-to-device leg of dependent dispatch: ``value`` (a jax
+        array, possibly still in flight — async dispatch chains it) is
+        resharded to this plan's operand sharding without ever visiting
+        the host.  Replicated consumer operands fan out along the PR-3
+        broadcast tree (root hop from the producer, then the levelled
+        d2d copies); sharding-identical forwards alias the producer's
+        buffer outright (zero copies) unless ``rename`` or a donating
+        config forces a fresh buffer — the WAR/WAW rename that keeps the
+        producer's result alive for its remaining readers.
+
+        Returns ``(staged, nbytes)`` where ``nbytes`` is the logical d2d
+        byte count of this edge (also accumulated into
+        ``stats.forward_bytes``; ``stats.h2d_bytes``/``d2h_bytes`` do
+        not move — that is the point).
+        """
+        names = tuple(n for n, _, _ in self.op_meta)
+        if name not in names:
+            raise ValueError(f"operand {name!r} not in plan {names}")
+        _check_live(value, f"forwarded operand {name!r}")
+        shape, dtype = next((s, d) for n, s, d in self.op_meta if n == name)
+        if tuple(value.shape) != shape or str(value.dtype) != dtype:
+            raise ValueError(
+                f"forwarded operand {name!r} is {value.shape}/{value.dtype},"
+                f" plan expects {shape}/{dtype}")
+        sharding = self.op_shardings[name]
+        must_rename = rename or self.runtime.config.donate_operands
+        moved = 0
+        src_sharding = getattr(value, "sharding", None)
+        if (src_sharding is not None
+                and src_sharding.is_equivalent_to(sharding, value.ndim)):
+            # same placement: alias (free) or rename-copy (per-device
+            # local, so the logical link bytes stay zero — no edge of
+            # the fabric is crossed)
+            if must_rename:
+                staged = jnp.copy(value)
+                self.stats.renames += 1
+            else:
+                staged = value
+        elif bc.is_replicated(sharding):
+            staged = self._tree_stager().forward_replicated(
+                value, sharding, stats=self.stats)
+            moved = value.nbytes * self.n_clusters
+        else:
+            # sharded consumer: each shard crosses the fabric once
+            staged = jax.device_put(value, sharding)
+            moved = value.nbytes
+            self.stats.forward_bytes += moved
+        self.stats.forwards += 1
+        return staged, moved
+
+    def stage_renamed(self, operands: Dict[str, Any], *,
+                      via: Optional[Union[str, Staging]] = None
+                      ) -> Tuple[Dict[str, Any], Dict[str, int]]:
+        """Graph-node staging: host arrays *and* forwarded device arrays.
+
+        Every buffer is fresh (renamed) — residency and stream slots are
+        never overwritten, so a graph node whose operands collide with a
+        resident buffer or an earlier node's staging proceeds instead of
+        stalling (the WAW side of the scoreboard's renaming).  Host
+        arrays take the ordinary :meth:`_put` path under ``via``;
+        device-resident values take :meth:`forward`.  Returns
+        ``(staged, forwarded_bytes_per_operand)``.
+        """
+        via = self._resolve_via(via)
+        names = tuple(sorted(operands))
+        if names != tuple(name for name, _, _ in self.op_meta):
+            raise ValueError(
+                f"operand names {names} do not match plan {self.op_meta}")
+        staged: Dict[str, Any] = {}
+        fwd_bytes: Dict[str, int] = {}
+        for name, shape, dtype in self.op_meta:
+            value = operands[name]
+            if isinstance(value, jax.Array):
+                staged[name], fwd_bytes[name] = self.forward(name, value)
+            else:
+                arr = np.asarray(value)
+                if tuple(arr.shape) != shape:
+                    raise ValueError(
+                        f"operand {name} shape {arr.shape} != planned "
+                        f"{shape}")
+                if str(arr.dtype) != dtype:
+                    raise ValueError(
+                        f"operand {name} dtype {arr.dtype} != planned "
+                        f"{dtype}")
+                staged[name] = self._put(arr, self.op_shardings[name], via)
+                self.stats.device_puts += 1
+        return staged, fwd_bytes
 
     def invalidate(self, names: Optional[Sequence[str]] = None) -> None:
         """Drop resident operand buffers (all, or a named subset)."""
@@ -811,7 +977,7 @@ class OffloadRuntime:
         handle = self._launch(plan, args_dev, op_dev)
         return FusedHandle(handle.job_id, handle.result, handle.arrivals,
                            plan.n_clusters, handle.dispatched_at, self,
-                           plan.cluster_ids, batch=B)
+                           plan.cluster_ids, plan, batch=B)
 
     def _launch(self, plan: DispatchPlan, args_dev: Any,
                 op_dev: Dict[str, Any],
@@ -831,7 +997,7 @@ class OffloadRuntime:
             args_dev, *(op_dev[name] for name, _, _ in plan.op_meta))
         plan._after_dispatch(consumed_resident=consumed_resident)
         return JobHandle(job_id, result, arrivals, plan.n_clusters,
-                         time.monotonic(), self, plan.cluster_ids)
+                         time.monotonic(), self, plan.cluster_ids, plan)
 
     def run(self, job: PaperJob, seed: int = 0, **sel) -> Tuple[Any, Any]:
         """Convenience: build an instance, offload it, return (got, expected)."""

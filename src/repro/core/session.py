@@ -61,12 +61,16 @@ from repro.core.faults import (
 )
 from repro.core.jobs import PaperJob, make_axpy, stack_instances
 from repro.core.offload import (
-    FusedHandle, OffloadConfig, OffloadRuntime, PlanStats,
+    FusedHandle, JobHandle, OffloadConfig, OffloadRuntime, PlanStats,
 )
 from repro.core.params import DEFAULT_PARAMS, OccamyParams
 from repro.core.phases import Phase
 from repro.core.policy import (
     AUTO, InfoDist, OffloadPolicy, Residency, RetryPolicy, Staging,
+)
+from repro.core.scoreboard import (
+    ISSUED, GraphError, GraphNode, InflightWindow, Ref, Scoreboard,
+    resolve_graph,
 )
 from repro.core.stream import OffloadStream
 
@@ -551,6 +555,95 @@ class ReliableHandle:
                        jobs=self.jobs, wall_s=None)
 
 
+class GraphHandle:
+    """An in-flight dependency graph (:meth:`Session.submit_graph`).
+
+    One :class:`~repro.core.offload.JobHandle` per node, issued by the
+    scoreboard in dependency order with producer results forwarded
+    device-to-device.  ``wait()`` retires every node (completion
+    doorbells only) and fetches just the *fetch* nodes' results — the
+    sinks by default — keyed by node name (or index when unnamed);
+    intermediate results never cross the host link, which the owning
+    plans' ``stats.d2h_bytes`` counters prove exactly.  ``result(node)``
+    fetches any single node on demand.  Both are idempotent.
+
+    ``forwarded`` maps each dataflow edge ``(producer, consumer,
+    operand)`` to its logical d2d byte count (0 for a same-sharding
+    alias or rename copy — no fabric edge crossed).
+    """
+
+    def __init__(self, nodes: Sequence[GraphNode], sb: Scoreboard,
+                 handles: List[JobHandle], fetch: List[int],
+                 forwarded: Dict[Tuple[int, int, str], int],
+                 window_stalls: int):
+        self.nodes = list(nodes)
+        self._sb = sb
+        self._handles = handles
+        self._fetch = fetch
+        self.forwarded = forwarded
+        self.window_stalls = window_stalls
+        self._keys: List[Union[int, str]] = [
+            nd.name if nd.name is not None else i
+            for i, nd in enumerate(self.nodes)]
+        self._results: Optional[Dict[Union[int, str], Any]] = None
+
+    @property
+    def issue_order(self) -> List[int]:
+        """The order the scoreboard actually issued nodes in."""
+        return list(self._sb.issue_order)
+
+    @property
+    def max_inflight(self) -> int:
+        return self._sb.max_inflight
+
+    def _node_index(self, node: Union[int, str]) -> int:
+        if isinstance(node, str):
+            for i, nd in enumerate(self.nodes):
+                if nd.name == node:
+                    return i
+            raise GraphError(f"unknown node name {node!r}")
+        idx = int(node)
+        if not 0 <= idx < len(self.nodes):
+            raise GraphError(
+                f"node index {idx} outside [0, {len(self.nodes)})")
+        return idx
+
+    def _retire_all(self) -> None:
+        """Retire every node (completion only, no result fetch).
+
+        Tolerant in shape: a :class:`CompletionTimeout` on one node
+        still retires the rest (abandoning them would leak their
+        completion-unit copies), then the first fault re-raises.
+        """
+        fault: Optional[CompletionTimeout] = None
+        for i, h in enumerate(self._handles):
+            try:
+                h.retire()
+            except CompletionTimeout as exc:
+                if fault is None:
+                    fault = exc
+            if self._sb.state[i] == ISSUED:
+                self._sb.retire(i)
+        if fault is not None:
+            raise fault
+
+    def wait(self) -> Dict[Union[int, str], Any]:
+        """Retire the whole graph; fetch and return the fetch nodes'
+        results, keyed by node name (or index when unnamed)."""
+        if self._results is not None:
+            return dict(self._results)
+        self._retire_all()
+        self._results = {self._keys[i]: self._handles[i].wait()
+                         for i in self._fetch}
+        return dict(self._results)
+
+    def result(self, node: Union[int, str]) -> Any:
+        """Fetch one node's result by name or index (idempotent; counts
+        its payload into the owning plan's ``d2h_bytes`` on first
+        fetch)."""
+        return self._handles[self._node_index(node)].wait()
+
+
 class Session:
     """The unified offload front door: typed policies, one submit path.
 
@@ -615,6 +708,7 @@ class Session:
             self._lease = None
         self._streams: Dict[Tuple, OffloadStream] = {}
         self._fused_inflight: Deque[FusedHandle] = collections.deque()
+        self._graphs: List["GraphHandle"] = []
         # estimates are deterministic per (job, selection, batch, policy):
         # cache them so warm submits pay no model arithmetic
         self._est_cache: Dict[Tuple, Estimate] = {}
@@ -740,8 +834,18 @@ class Session:
                                         Sequence[np.ndarray]]] = None,
                n: Optional[int] = None,
                request: Optional[mc.MulticastRequest] = None,
-               clusters: Optional[Sequence[int]] = None) -> SessionHandle:
+               clusters: Optional[Sequence[int]] = None,
+               after: Sequence[Any] = ()) -> SessionHandle:
         """Dispatch ``job`` under a typed policy — the one submit path.
+
+        ``after`` adds ordering edges on in-flight handles
+        (:class:`SessionHandle`, :class:`GraphHandle`, or raw job
+        handles): a predecessor sharing clusters with this selection is
+        ordered for free (per-device launch order serializes on the
+        shared lease), a disjoint one gets a conservative completion
+        barrier — its doorbell is collected (``retire()``), never its
+        result payload.  For dataflow (consuming a predecessor's
+        *result*), use :meth:`submit_graph`.
 
         ``operands`` selects the shape of the submit:
 
@@ -762,6 +866,10 @@ class Session:
         self._check_open("submit")
         pol = self.policy if policy is None else policy
         if pol.retry is not None:
+            # reliable dispatch is synchronous: barrier every predecessor
+            for h in after:
+                for jh in self._job_handles_of(h):
+                    jh.retire()
             return self._submit_reliable(job, operands, pol, job_args,
                                          n, request, clusters)
         resident = isinstance(operands, Residency)
@@ -788,6 +896,12 @@ class Session:
             raise TypeError(f"unsupported operands {type(operands)!r}")
 
         ids, n = self._selection_ids(pol, n, request, clusters)
+        if after:
+            mine = set(ids)
+            for h in after:
+                for jh in self._job_handles_of(h):
+                    if not (set(jh.cluster_ids) & mine):
+                        jh.retire()   # disjoint: completion barrier
         batch = (len(operands) if multi
                  else (pol.fuse or 1) if resident else 1)
         first_ops = (operands[0] if multi
@@ -861,6 +975,142 @@ class Session:
 
         return SessionHandle(self, job, est, parts, multi or
                              (resident and decision.fuse > 1), plans, t0)
+
+    @staticmethod
+    def _job_handles_of(h: Any) -> List[JobHandle]:
+        """Flatten an ``after=`` predecessor to its raw job handles."""
+        if isinstance(h, SessionHandle):
+            return [p for _, p in h._parts]
+        if isinstance(h, GraphHandle):
+            return list(h._handles)
+        if isinstance(h, JobHandle):
+            return [h]
+        raise TypeError(
+            f"after= takes session/graph/job handles, got "
+            f"{type(h).__name__}")
+
+    # -- dependent job graphs -----------------------------------------------
+
+    def submit_graph(self, nodes: Sequence[GraphNode], *,
+                     policy: Optional[OffloadPolicy] = None) -> GraphHandle:
+        """Dispatch a DAG of dependent jobs like an out-of-order core.
+
+        ``nodes`` are :class:`~repro.core.scoreboard.GraphNode`\\ s whose
+        operands may be host arrays, ``Residency.RESIDENT``, or
+        :class:`~repro.core.scoreboard.Ref`\\ s to earlier nodes'
+        results; ``after=`` entries add pure ordering edges.  The
+        scoreboard (Active List + Integer Queue) issues every node whose
+        producers have *issued* — async dispatch chains the data
+        device-side, so independent sub-DAGs issue concurrently across
+        the in-flight window (and across leases, for nodes carrying
+        ``session=`` of another session).  Producer results are
+        forwarded device-to-device to each consumer's sharding
+        (:meth:`DispatchPlan.forward <repro.core.offload.DispatchPlan.forward>`
+        — alias, rename copy, reshard, or fan-out tree); they are never
+        fetched to the host unless the node is a *fetch* node (a sink,
+        or ``fetch=True``).  WAR/WAW hazards against resident buffers
+        and donating consumers are broken by renaming: graph staging
+        always lands in fresh buffers.
+
+        Returns a :class:`GraphHandle`; its ``wait()`` yields the fetch
+        nodes' results keyed by name (or index).
+        """
+        self._check_open("submit_graph")
+        pol = self.policy if policy is None else policy
+        if pol.retry is not None:
+            raise GraphError(
+                "graph submits do not ride the retry/deadline ladder; "
+                "drop policy.retry (wrap individual submits for "
+                "fault-tolerant dispatch)")
+        import jax
+        nodes = list(nodes)
+        for nd in nodes:
+            if not isinstance(nd, GraphNode):
+                raise GraphError(
+                    f"submit_graph takes GraphNode entries, got "
+                    f"{type(nd).__name__}")
+        deps, data_edges = resolve_graph(nodes)
+        sb = Scoreboard(deps)
+        targets: List["Session"] = []
+        rts: List[OffloadRuntime] = []
+        sel_kwargs: List[Dict[str, Any]] = []
+        for i, nd in enumerate(nodes):
+            t = nd.session if nd.session is not None else self
+            if not isinstance(t, Session):
+                raise GraphError(
+                    f"node {i}: session= must be a Session, got "
+                    f"{type(t).__name__}")
+            t._check_open(f"submit_graph node {i}")
+            _, n_eff = t._selection_ids(pol, nd.n, nd.request, nd.clusters)
+            targets.append(t)
+            rts.append(t._runtime_for(pol))
+            sel_kwargs.append(dict(n=n_eff, request=nd.request,
+                                   clusters=nd.clusters))
+        via = pol.staging          # None -> the runtime's substrate default
+        windows: Dict[int, InflightWindow] = {}
+        handles: List[Optional[JobHandle]] = [None] * len(nodes)
+        forwarded: Dict[Tuple[int, int, str], int] = {}
+
+        def _drain(entry: Tuple[int, JobHandle]) -> None:
+            j, h = entry
+            h.retire()
+            if sb.state[j] == ISSUED:
+                sb.retire(j)
+
+        while not sb.all_issued:
+            i = sb.ready()[0]              # Integer Queue, age order
+            nd, rt = nodes[i], rts[i]
+            win = windows.get(id(rt))
+            if win is None:
+                limit = (pol.window if pol.window is not None
+                         else rt.unit.n_units)
+                win = InflightWindow(max(1, min(limit, rt.unit.n_units)))
+                windows[id(rt)] = win
+            job_args = np.asarray(
+                nd.job_args if nd.job_args is not None
+                else np.ones((8,), dtype=np.float64), dtype=np.float64)
+            if isinstance(nd.operands, Residency):
+                if nd.operands is not Residency.RESIDENT:
+                    raise GraphError(
+                        f"node {i}: pass an operand dict or "
+                        "Residency.RESIDENT")
+                plan = rt.plan(nd.job, operands=None,
+                               args_shape=job_args.shape, **sel_kwargs[i])
+                win.make_room(_drain)
+                args_dev = plan.stage_args(job_args, via=via)
+                staged = plan.resident_operands()
+                handle = rt._launch(plan, args_dev, staged)
+            else:
+                ops = dict(nd.operands)
+                for src, op_name in data_edges[i]:
+                    # the producer's (possibly still in-flight) output —
+                    # async dispatch chains it device-side
+                    ops[op_name] = handles[src].result
+                meta = {
+                    k: (np.broadcast_to(np.zeros((), v.dtype), v.shape)
+                        if isinstance(v, jax.Array) else np.asarray(v))
+                    for k, v in ops.items()}
+                plan = rt.plan(nd.job, operands=meta,
+                               args_shape=job_args.shape, **sel_kwargs[i])
+                win.make_room(_drain)
+                args_dev = plan.stage_args(job_args, via=via)
+                staged, fwd = plan.stage_renamed(ops, via=via)
+                for src, op_name in data_edges[i]:
+                    forwarded[(src, i, op_name)] = fwd.get(op_name, 0)
+                handle = rt._launch(plan, args_dev, staged,
+                                    consumed_resident=False)
+            handles[i] = handle
+            sb.issue(i)
+            win.push((i, handle))
+
+        sinks = set(sb.sinks())
+        fetch = [i for i, nd in enumerate(nodes)
+                 if (nd.fetch if nd.fetch is not None else i in sinks)]
+        gh = GraphHandle(nodes, sb, handles, fetch, forwarded,
+                         sum(w.stalls for w in windows.values()))
+        for t in {id(t): t for t in [self] + targets}.values():
+            t._graphs.append(gh)
+        return gh
 
     # -- the fault-tolerant path --------------------------------------------
 
@@ -1217,9 +1467,15 @@ class Session:
             while stream._inflight:
                 try:
                     stream._inflight.popleft().wait()
-                    stream.stats["drained"] += 1
+                    stream._stats["drained"] += 1
                 except CompletionTimeout:
                     self._health.jobs_failed += 1
+        for gh in self._graphs:
+            try:
+                gh._retire_all()
+            except CompletionTimeout:
+                self._health.jobs_failed += 1
+        self._graphs.clear()
 
     def health(self) -> SessionHealth:
         """Fault/recovery counters of this session (a snapshot)."""

@@ -37,8 +37,7 @@ or, submit-and-drain in one call::
 
 from __future__ import annotations
 
-import collections
-from typing import Any, Deque, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -47,6 +46,7 @@ from repro.core.offload import (
     DispatchPlan, JobHandle, OffloadRuntime, _is_resident,
 )
 from repro.core.policy import Staging, coerce_enum, warn_legacy
+from repro.core.scoreboard import InflightWindow
 from repro.core import multicast as mc
 
 
@@ -91,15 +91,18 @@ class OffloadStream:
         #: concerns when staging happens, the tree only concerns how
         self.staging = staging
         # the window is capped by the completion-unit copies: job k and job
-        # k + n_units share a unit, so k must have completed first
+        # k + n_units share a unit, so k must have completed first — the
+        # same InflightWindow bound the graph dispatcher uses (fig. 6)
         self.window = min(window or runtime.unit.n_units,
                           runtime.unit.n_units)
         self.plan: Optional[DispatchPlan] = None
-        self._inflight: Deque[JobHandle] = collections.deque()
+        self._inflight = InflightWindow(self.window)
         self._seq = 0
-        self.stats: Dict[str, int] = {
-            "submitted": 0, "window_stalls": 0, "drained": 0,
-        }
+        self._stats: Dict[str, int] = {"submitted": 0, "drained": 0}
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return dict(self._stats, window_stalls=self._inflight.stalls)
 
     @property
     def inflight(self) -> int:
@@ -131,24 +134,20 @@ class OffloadStream:
         else:
             staged = self.plan.stage(operands, slot=self._seq % self.depth,
                                      via=self.staging)
-        if len(self._inflight) >= self.window:
-            # all completion-unit copies busy: block on the oldest job
-            self._inflight.popleft().wait()
-            self.stats["window_stalls"] += 1
+        # all completion-unit copies busy: block on the oldest job
+        self._inflight.make_room(lambda h: h.wait())
         args_dev = self.plan.stage_args(job_args, via=self.staging)
         handle = self.runtime._launch(self.plan, args_dev, staged,
                                       consumed_resident=resident)
-        self._inflight.append(handle)
+        self._inflight.push(handle)
         self._seq += 1
-        self.stats["submitted"] += 1
+        self._stats["submitted"] += 1
         return handle
 
     def drain(self) -> List[Any]:
         """Wait for every in-flight job, in submit order; returns results."""
-        out = []
-        while self._inflight:
-            out.append(self._inflight.popleft().wait())
-            self.stats["drained"] += 1
+        out = self._inflight.drain_all(lambda h: h.wait())
+        self._stats["drained"] += len(out)
         return out
 
     def map(self, instances: Sequence[Dict[str, np.ndarray]],

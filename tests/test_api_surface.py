@@ -33,14 +33,17 @@ def _params(fn):
 
 EXPORTS = (
     "AUTO", "BackupOffload", "ClusterLease", "Completion",
-    "CompletionTimeout", "Estimate", "Explain", "FabricHealth",
+    "CompletionTimeout", "DonatedOperandError", "Estimate", "Explain",
+    "FabricHealth",
     "FabricScheduler", "FaultError", "FaultInjector", "FaultKind",
-    "FaultPlan", "FaultSpec", "InfoDist", "JobHandle", "LeaseError",
+    "FaultPlan", "FaultSpec", "GraphError", "GraphHandle", "GraphNode",
+    "InfoDist", "JobHandle", "LeaseError",
     "LeaseUnavailable", "MulticastRequest", "OffloadConfig", "OffloadPolicy",
     "OffloadRuntime", "Overloaded", "PAPER_JOBS", "PaperJob", "PendingLease",
     "PlanDecision", "PlanStats",
-    "Planner", "ReliableHandle", "Residency", "RetryPolicy",
-    "SchedulerPolicy", "ServeConfig", "ServeEngine", "ServeTenant",
+    "Planner", "Ref", "ReliableHandle", "Residency", "RetryPolicy",
+    "SchedulerPolicy", "Scoreboard", "ServeConfig", "ServeEngine",
+    "ServeTenant",
     "Session", "SessionHandle", "SessionHealth", "Staging", "StepWatchdog",
     "Tenant", "TenantKind", "WatchdogConfig", "deadline_cycles",
     "elastic_restore", "estimate", "make_instances", "predict_recovery",
@@ -72,7 +75,14 @@ SNAPSHOT = {
     "Session": ("devices=", "lease=", "policy=", "n_units=", "params=",
                 "planner=", "runtime=", "faults="),
     "Session.submit": ("job", "operands", "policy=", "job_args=", "n=",
-                       "request=", "clusters="),
+                       "request=", "clusters=", "after="),
+    "Session.submit_graph": ("nodes", "policy="),
+    "GraphNode": ("job", "operands", "name=", "job_args=", "after=", "n=",
+                  "request=", "clusters=", "fetch=", "session="),
+    "Ref": ("node",),
+    "GraphHandle.wait": (),
+    "GraphHandle.result": ("node",),
+    "FabricScheduler.submit_graph": ("nodes", "policy="),
     "Session.estimate": ("job", "batch=", "policy=", "n=", "clusters=",
                          "operands="),
     "Session.stage": ("job", "operands", "policy=", "n=", "request=",

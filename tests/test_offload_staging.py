@@ -242,3 +242,76 @@ for key in ("tree", "tree_reshard"):
     assert stats[key]["d2d_bytes"] > 0
 print("OK")
 """, devices=8, x64=False, timeout=900)
+
+
+def test_forward_and_d2h_byte_counters_exact(subproc):
+    """ISSUE-8 satellite: PlanStats d2h and per-edge forwarding byte
+    counters are *exact* across every forward flavor — alias (0 bytes),
+    reshard (nbytes once), replicated tree fan-out (n x nbytes) — and
+    ``wait()`` charges d2h exactly once per fetched result."""
+    subproc("""
+import numpy as np
+from repro.core.jobs import make_axpy, make_covariance
+from repro.core.scoreboard import GraphNode, Ref
+from repro.core.session import Session
+
+# -- alias: same selection/sharding edge crosses zero fabric bytes ------
+axpy = make_axpy(2048)
+ops, _ = axpy.make_instance(0)
+s = Session()
+gh = s.submit_graph([
+    GraphNode(axpy, ops, name="p", clusters=[0, 1]),
+    GraphNode(axpy, {"x": ops["x"], "y": Ref("p")}, name="c",
+              clusters=[0, 1]),
+])
+out = gh.wait()
+assert gh.forwarded[(0, 1, "y")] == 0          # aliased, not copied
+assert s.stats.forwards == 1
+assert s.stats.forward_bytes == 0
+assert s.stats.d2h_bytes == out["c"].nbytes    # exactly the fetched sink
+
+# -- reshard: sharded consumer on a different selection: nbytes once ----
+s2 = Session()
+gh2 = s2.submit_graph([
+    GraphNode(axpy, ops, name="p", clusters=[0]),
+    GraphNode(axpy, {"x": ops["x"], "y": Ref("p")}, name="c",
+              clusters=[4, 5]),
+])
+out2 = gh2.wait()
+assert gh2.forwarded[(0, 1, "y")] == ops["y"].nbytes
+assert s2.stats.forward_bytes == ops["y"].nbytes
+assert s2.stats.d2h_bytes == out2["c"].nbytes
+assert np.array_equal(np.asarray(out["c"]), np.asarray(out2["c"]))
+
+# -- replicated consumer: PR-3 tree fan-out, n x nbytes, h2d untouched --
+cov = make_covariance(32, 32)                  # (32,32) -> (32,32)
+cops, _ = cov.make_instance(0)
+s3 = Session()
+h2d_probe = Session()
+gh3 = s3.submit_graph([
+    GraphNode(cov, cops, name="p", clusters=[0, 1]),
+    GraphNode(cov, {"data": Ref("p")}, name="c", clusters=[4, 5, 6, 7]),
+])
+out3 = gh3.wait()
+nbytes = cops["data"].nbytes
+assert gh3.forwarded[(0, 1, "data")] == 4 * nbytes, gh3.forwarded
+exp = np.asarray(out3["c"])
+centred = cops["data"] - cops["data"].mean(axis=1, keepdims=True)
+ref = centred @ centred.T / (cops["data"].shape[1] - 1)
+centred2 = ref - ref.mean(axis=1, keepdims=True)
+assert np.allclose(exp, centred2 @ centred2.T / (ref.shape[1] - 1))
+# the forwarded operand never crossed the host link: the graph's h2d
+# exceeds a lone producer's staging by the consumer's job-args upload
+# only — strictly less than one copy of the operand
+lone = h2d_probe.submit(cov, cops, clusters=[0, 1]); lone.wait()
+args_only = s3.stats.h2d_bytes - h2d_probe.stats.h2d_bytes
+assert 0 <= args_only < nbytes, (args_only, nbytes)
+assert s3.stats.d2d_bytes == 4 * nbytes            # fan-out rode the tree
+assert s3.stats.d2h_bytes == out3["c"].nbytes
+
+# -- d2h idempotency: re-wait and result() never re-charge --------------
+gh3.wait(); gh3.result("c")
+assert s3.stats.d2h_bytes == out3["c"].nbytes
+s.drain(); s2.drain(); s3.drain(); h2d_probe.drain()
+print("OK")
+""")

@@ -1,0 +1,284 @@
+"""Scoreboard / InflightWindow property tests (pure host-side, no jax).
+
+Drives the out-of-order issue engine with synthetic random DAG
+topologies: issue order must always be a topological order, the
+protocol must reject every illegal transition with a typed
+:class:`GraphError`, and the ``CompletionUnit`` must survive
+out-of-order arrival interleaved with ``cancel()`` and deferred-IRQ
+replay when driven through the scoreboard path (ISSUE-8 satellite).
+"""
+
+import collections
+import random
+
+import pytest
+
+from repro.core.completion import CompletionUnit
+from repro.core.scoreboard import (
+    ISSUED,
+    RETIRED,
+    WAITING,
+    GraphError,
+    GraphNode,
+    InflightWindow,
+    Ref,
+    Scoreboard,
+    resolve_graph,
+)
+
+
+def _random_deps(rng, n, max_deps=3):
+    """Random DAG as per-node predecessor lists (edges point backward)."""
+    return [
+        sorted(rng.sample(range(i), k=rng.randint(0, min(i, max_deps))))
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# resolve_graph: names, refs, typed errors
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_graph_names_refs_and_after():
+    nodes = [
+        GraphNode(job=None, operands={"x": 1.0, "y": 2.0}, name="a"),
+        GraphNode(job=None, operands={"x": Ref("a"), "y": 3.0}, name="b"),
+        GraphNode(job=None, operands={"x": Ref(0), "y": Ref("b")},
+                  after=["a"]),
+    ]
+    deps, data_edges = resolve_graph(nodes)
+    assert deps == [[], [0], [0, 1]]
+    assert data_edges == [[], [(0, "x")], [(0, "x"), (1, "y")]]
+
+
+def test_resolve_graph_duplicate_ref_keeps_both_edges():
+    # One entry per dataflow edge: reading the same producer through two
+    # operands is two edges (the self-scaling chain y <- a*y + y does this).
+    nodes = [
+        GraphNode(job=None, operands={"x": 1.0, "y": 2.0}),
+        GraphNode(job=None, operands={"x": Ref(0), "y": Ref(0)}),
+    ]
+    deps, data_edges = resolve_graph(nodes)
+    assert deps == [[], [0]]                      # dedup for ordering
+    assert data_edges[1] == [(0, "x"), (0, "y")]  # both edges kept
+
+
+@pytest.mark.parametrize("nodes, match", [
+    ([], "empty graph"),
+    ([GraphNode(job=None, operands={}, name="a"),
+      GraphNode(job=None, operands={}, name="a")], "duplicate node name"),
+    ([GraphNode(job=None, operands={"x": Ref("ghost")})], "unknown node name"),
+    ([GraphNode(job=None, operands={"x": Ref(5)})], "outside"),
+    ([GraphNode(job=None, operands={"x": Ref(0)})], "depends on itself"),
+    ([GraphNode(job=None, operands={}, after=[0])], "depends on itself"),
+])
+def test_resolve_graph_errors(nodes, match):
+    with pytest.raises(GraphError, match=match):
+        resolve_graph(nodes)
+
+
+def test_graph_error_is_value_error():
+    assert issubclass(GraphError, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# Scoreboard protocol
+# ---------------------------------------------------------------------------
+
+
+def test_cycle_detection():
+    with pytest.raises(GraphError, match="cycle"):
+        Scoreboard([[1], [0]])
+    with pytest.raises(GraphError, match="cycle"):
+        Scoreboard([[2], [0], [1]])
+
+
+def test_out_of_range_and_self_dep():
+    with pytest.raises(GraphError, match="out-of-range"):
+        Scoreboard([[3]])
+    with pytest.raises(GraphError, match="itself"):
+        Scoreboard([[0]])
+
+
+def test_issue_protocol_violations():
+    sb = Scoreboard([[], [0]])
+    with pytest.raises(GraphError, match="not ready"):
+        sb.issue(1)                     # predecessor unissued
+    with pytest.raises(GraphError, match="cannot retire"):
+        sb.retire(0)                    # never issued
+    sb.issue(0)
+    with pytest.raises(GraphError, match="already issued"):
+        sb.issue(0)                     # double issue
+    sb.retire(0)
+    with pytest.raises(GraphError, match="cannot retire"):
+        sb.retire(0)                    # double retire
+    with pytest.raises(GraphError, match="already retired"):
+        sb.issue(0)
+
+
+def test_dispatch_based_readiness_not_completion_based():
+    # A consumer becomes issuable the moment its producer is ISSUED (async
+    # dispatch chains device-side) — retirement is not required.
+    sb = Scoreboard([[], [0]])
+    assert sb.ready() == [0]
+    sb.issue(0)
+    assert sb.state[0] == ISSUED and sb.ready() == [1]
+    sb.issue(1)                         # producer still in flight
+    assert sb.inflight == 2 and sb.all_issued and not sb.all_retired
+    sb.retire(1)                        # out-of-order retirement is legal
+    sb.retire(0)
+    assert sb.all_retired and sb.retire_order == [1, 0]
+
+
+def test_pending_readers_rename_query():
+    # diamond: 0 feeds 1 and 2; 3 joins.
+    sb = Scoreboard([[], [0], [0], [1, 2]])
+    sb.issue(0)
+    assert sb.pending_readers(0) == 2   # both arms still unissued: rename
+    sb.issue(1)
+    assert sb.pending_readers(0) == 1   # arm 2 still reads node 0
+    sb.issue(2)
+    assert sb.pending_readers(0) == 0   # safe to donate in place now
+    sb.issue(3)
+    assert sb.sinks() == [3]
+
+
+def test_random_dags_issue_order_is_topological():
+    for seed in range(30):
+        rng = random.Random(seed)
+        deps = _random_deps(rng, rng.randint(1, 40))
+        sb = Scoreboard(deps)
+        window = rng.randint(1, 6)
+        inflight = collections.deque()
+        while not sb.all_retired:
+            ready = sb.ready()
+            if ready and len(inflight) < window and rng.random() < 0.7:
+                i = rng.choice(ready)
+                sb.issue(i)
+                inflight.append(i)
+            elif inflight:
+                sb.retire(inflight.popleft())
+        # issue order is a topological order of the DAG
+        pos = {i: k for k, i in enumerate(sb.issue_order)}
+        for i, d in enumerate(deps):
+            for p in d:
+                assert pos[p] < pos[i], (seed, p, i)
+        assert sorted(sb.issue_order) == list(range(len(deps)))
+        assert sorted(sb.retire_order) == list(range(len(deps)))
+        assert sb.max_inflight <= window
+        assert sb.inflight == 0
+        # pending_readers fully drained
+        assert all(sb.pending_readers(i) == 0 for i in range(len(deps)))
+
+
+# ---------------------------------------------------------------------------
+# InflightWindow
+# ---------------------------------------------------------------------------
+
+
+def test_inflight_window_drains_oldest_and_counts_stalls():
+    win = InflightWindow(2)
+    drained = []
+    win.push("a"), win.push("b")
+    win.make_room(drained.append)       # full: drains oldest
+    assert drained == ["a"] and win.stalls == 1
+    win.push("c")
+    win.make_room(drained.append)
+    assert drained == ["a", "b"] and win.stalls == 2
+    assert win.drain_all(lambda h: h) == ["c"]
+    assert len(win) == 0
+    win.make_room(drained.append)       # room available: no stall
+    assert win.stalls == 2
+
+
+def test_inflight_window_rejects_zero_limit():
+    with pytest.raises(ValueError, match="window limit"):
+        InflightWindow(0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: CompletionUnit.collect under out-of-order arrival interleaved
+# with cancel() and deferred-IRQ replay, driven through the scoreboard path.
+# ---------------------------------------------------------------------------
+
+
+def test_completion_unit_ooo_collect_cancel_replay_over_random_dags():
+    """Property test: random DAG topologies drive Scoreboard + a shared
+    CompletionUnit exactly the way the graph dispatcher does (job k and
+    k + n_units share a unit copy; oldest-first drain keeps reuse legal).
+
+    Interleavings exercised every round:
+      * out-of-order arrival: a random subset of in-flight jobs completes
+        (fires or defers its IPI) before the oldest job collects;
+      * deferred-IRQ replay: those early completions queue behind the
+        pending cause and are parked by ``collect`` for later jobs;
+      * cancel(): ~25% of dispatches lose an arrival, get cancelled
+        (missing count observed) and are re-programmed on the same unit
+        copy — the replay path must never resurrect the cancelled cause.
+    """
+    for seed in range(25):
+        rng = random.Random(1000 + seed)
+        deps = _random_deps(rng, rng.randint(2, 24))
+        sb = Scoreboard(deps)
+        unit = CompletionUnit(n_units=rng.randint(1, 4))
+        win = collections.deque()       # (node, job_id, n_clusters)
+        next_job = 0
+        arrived = set()                 # job ids whose IPI already fired
+        cancelled_replayed = 0
+        while not sb.all_retired:
+            ready = sb.ready()
+            if ready and len(win) < unit.n_units and rng.random() < 0.7:
+                i = rng.choice(ready)
+                jid, next_job = next_job, next_job + 1
+                nc = rng.randint(1, 8)
+                unit.program(nc, jid)
+                if nc > 1 and rng.random() < 0.25:
+                    # fault: straggler never arrives -> cancel + resubmit
+                    unit.arrive(jid, nc - 1)
+                    assert unit.cancel(jid) == 1
+                    unit.program(nc, jid)   # replay on the same unit copy
+                    cancelled_replayed += 1
+                sb.issue(i)
+                win.append((i, jid, nc))
+            elif win:
+                # out-of-order completion: a random in-flight suffix
+                # finishes before the oldest job is collected
+                for (_, jj, nn) in rng.sample(list(win),
+                                              rng.randint(1, len(win))):
+                    if jj not in arrived:
+                        unit.arrive(jj, nn)   # fires or defers the IPI
+                        arrived.add(jj)
+                i, jid, nc = win.popleft()    # retire the oldest (unit reuse)
+                if jid not in arrived:
+                    unit.arrive(jid, nc)
+                    arrived.add(jid)
+                unit.collect(jid)             # parks other causes
+                sb.retire(i)
+        assert sb.all_retired
+        assert unit.outstanding() == {}       # every register drained
+        # every parked cause was eventually claimed by its own collect
+        assert unit._collected == set(), seed
+        assert unit.pending_cause() is None, seed
+        assert cancelled_replayed >= 0        # path exercised across seeds
+
+
+def test_completion_unit_cancel_purges_racing_completion():
+    """A completion that raced the cancel (cause pending or deferred)
+    must not be collected by a later job reusing the unit copy."""
+    unit = CompletionUnit(n_units=1)
+    unit.program(4, job_id=0)
+    unit.arrive(0, 4)                   # completes: cause 0 pending
+    unit.cancel(0)                      # deadline tripped after the race
+    assert unit.pending_cause() is None
+    unit.program(4, job_id=1)
+    unit.arrive(1, 4)
+    unit.collect(1)                     # must see cause 1, not stale 0
+    # deferred variant: cause 0 pending, cause 1 deferred, cancel 1
+    unit.program(2, job_id=0)
+    unit.arrive(0, 2)
+    unit.program(3, job_id=1)
+    unit.arrive(1, 3)                   # deferred behind cause 0
+    unit.cancel(1)
+    unit.collect(0)
+    assert unit.pending_cause() is None

@@ -114,3 +114,100 @@ def test_sim_total_positive_and_finite(n):
         for mode in simulator.MODES:
             t = simulator.simulate(spec, n, mode).total
             assert np.isfinite(t) and t > 0
+
+
+# ---------------------------------------------------------------------------
+# Dependent job graphs (ISSUE-8): event model vs closed-form bounds
+# ---------------------------------------------------------------------------
+
+
+def _chain(N, K=8, clusters=8):
+    """Self-scaling chain y <- a*y + y: both operands read the previous
+    node's result (two dataflow edges per link)."""
+    spec = jobs.axpy_spec(N)
+    sel = tuple(range(clusters))
+    return [simulator.GraphJob(spec=spec, clusters=sel,
+                               deps=(i - 1, i - 1) if i else (),
+                               out_bytes=N * 8)
+            for i in range(K)]
+
+
+def test_graph_chain_model_error_under_15pct():
+    """§6 contract extended to graphs: closed-form critical-path bound vs
+    the dependency-aware event model, < 15 % on K=8 chains across sizes."""
+    for N in (256, 1024, 2048, 4096, 16384):
+        nodes = _chain(N)
+        ev = simulator.simulate_graph(nodes, window=4)
+        cf = simulator.graph_critical_path(nodes)
+        err = simulator.model_error(cf, ev.makespan)
+        assert err < 0.15, (N, cf, ev.makespan)
+
+
+def test_graph_chain_beats_isolated_baseline():
+    """The dag acceptance bar: a K=8 dependent chain through the graph
+    path costs <= 0.6x the chained submit+wait baseline (every edge
+    bouncing d2h + h2d through the host)."""
+    nodes = _chain(2048)
+    ev = simulator.simulate_graph(nodes, window=4)
+    iso = simulator.isolated_graph_cycles(nodes)
+    assert ev.makespan / iso <= 0.6, (ev.makespan, iso)
+
+
+def test_graph_diamond_arms_overlap():
+    """Independent diamond arms on disjoint selections issue concurrently:
+    makespan ~ critical path, strictly under the arms-serialized variant."""
+    spec = jobs.axpy_spec(8192)
+    nb = 8192 * 8
+    c8, left, right = tuple(range(8)), tuple(range(4)), tuple(range(4, 8))
+    diamond = [
+        simulator.GraphJob(spec=spec, clusters=c8, out_bytes=nb),
+        simulator.GraphJob(spec=spec, clusters=left, deps=(0,),
+                           out_bytes=nb),
+        simulator.GraphJob(spec=spec, clusters=right, deps=(0,),
+                           out_bytes=nb),
+        simulator.GraphJob(spec=spec, clusters=c8, deps=(1, 2),
+                           out_bytes=nb),
+    ]
+    ev = simulator.simulate_graph(diamond, window=4)
+    cf = simulator.graph_critical_path(diamond)
+    assert simulator.model_error(cf, ev.makespan) < 0.15
+    serial = [diamond[0], diamond[1],
+              simulator.GraphJob(spec=spec, clusters=right, deps=(0, 1),
+                                 out_bytes=nb),
+              diamond[3]]
+    evs = simulator.simulate_graph(serial, window=4)
+    assert ev.makespan < evs.makespan * 0.85, (ev.makespan, evs.makespan)
+    assert ev.issue_order[0] == 0 and ev.issue_order[-1] == 3
+
+
+def test_forward_model_tracks_event_forward():
+    """Closed-form per-hop forward cost vs the discrete-event edge model:
+    aliasing is free in both, every other flavor agrees within 15 %."""
+    for nbytes in (2048, 65536, 1 << 20):
+        assert simulator.simulate_forward(nbytes, range(8), range(8)) == 0.0
+        assert simulator.forward_model(nbytes, range(8), range(8)) == 0.0
+        for src, dst, rep in [([0], [4, 5], False),
+                              ([0, 1], range(4, 8), True),
+                              (range(4), range(8), True)]:
+            ev = simulator.simulate_forward(nbytes, src, dst, replicate=rep)
+            cf = simulator.forward_model(nbytes, src, dst, replicate=rep)
+            assert ev > 0.0
+            assert simulator.model_error(cf, ev) < 0.15, (nbytes, src, dst)
+
+
+def test_graph_window_bounds_inflight():
+    """The event model respects the completion-unit window: max in-flight
+    never exceeds it, and widening the window never hurts the makespan."""
+    spec = jobs.axpy_spec(1024)
+    independent = [simulator.GraphJob(spec=spec, clusters=(i,),
+                                      out_bytes=1024 * 8)
+                   for i in range(8)]
+    t1 = simulator.simulate_graph(independent, window=1).makespan
+    t4 = simulator.simulate_graph(independent, window=4).makespan
+    t8 = simulator.simulate_graph(independent, window=8).makespan
+    assert t1 >= t4 >= t8
+    assert t8 < t1                       # overlap actually bought cycles
+    with pytest.raises(ValueError):
+        simulator.simulate_graph(independent, window=0)
+    with pytest.raises(ValueError):
+        simulator.simulate_graph([])
