@@ -1,28 +1,31 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: check test typecheck bench-smoke bench-offload
+.PHONY: check test typecheck bench-smoke bench-offload verify-graphs
 
 # Tier-1 verify: full test suite + a benchmark smoke (what CI runs).
-check: test typecheck bench-smoke
+check: test typecheck bench-smoke verify-graphs
 
 test:
 	$(PYTHON) -m pytest -x -q
 
-# Static types on the public surface (repro.api, the policy vocabulary,
-# the fabric scheduler, the session submit path, the serve engine, and
-# the fault-tolerance substrate).  Skips gracefully where mypy is not
-# installed (it is in requirements-dev.txt, so CI always runs it).
+# Static types on the public surface (repro.api, all of repro.core, the
+# analysis package, the serve engine, and the fault-tolerance
+# substrate).  Skips gracefully where mypy is not installed (it is in
+# requirements-dev.txt, so CI always runs it).
 typecheck:
 	@if $(PYTHON) -c "import mypy" 2>/dev/null; then \
 		$(PYTHON) -m mypy --config-file mypy.ini \
-			src/repro/api.py src/repro/core/policy.py src/repro/core/fabric.py \
-			src/repro/core/scoreboard.py \
-			src/repro/core/faults.py src/repro/core/session.py \
+			src/repro/api.py src/repro/core/ src/repro/analysis/ \
 			src/repro/serve/engine.py src/repro/ft/; \
 	else \
 		echo "mypy not installed; skipping typecheck"; \
 	fi
+
+# Zero-diagnostics gate: every checked-in job graph (examples/ +
+# benchmarks/) must pass the static verifier with no diagnostics.
+verify-graphs:
+	$(PYTHON) benchmarks/verify_graphs.py
 
 bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \

@@ -45,6 +45,9 @@ Row = Tuple[str, float, str]
 RATIO_BAR = 0.6       # chain graph latency <= bar x isolated baseline
 OVERLAP_BAR = 1.15    # serialized diamond arms / overlapped >= bar
 MODEL_BAR = 15.0      # percent, the paper's §6 accuracy bar
+#: ISSUE-9 bar: static verification of the chain graph costs < 5 % of
+#: one warm dispatch of the same graph
+VERIFY_BAR = 5.0
 
 CHAIN_K = 8
 CHAIN_SIZES = (256, 2048, 16384)
@@ -111,11 +114,46 @@ def _model_rows() -> Tuple[List[Row], dict]:
     return rows, {"errs": errs, "ratio": ratio, "overlap": overlap}
 
 
+def _chain_nodes(job, ops, K: int = CHAIN_K):
+    from repro.core.scoreboard import GraphNode, Ref
+
+    nodes = [GraphNode(job, ops, name="n0")]
+    for k in range(1, K):
+        nodes.append(GraphNode(job, {"x": ops["x"], "y": Ref(f"n{k-1}")},
+                               name=f"n{k}"))
+    return nodes
+
+
+def _diamond_nodes(job, ops):
+    from repro.core.scoreboard import GraphNode, Ref
+
+    return [
+        GraphNode(job, ops, name="src"),
+        GraphNode(job, {"x": ops["x"], "y": Ref("src")}, name="l",
+                  clusters=[0, 1, 2, 3]),
+        GraphNode(job, {"x": ops["x"], "y": Ref("src")}, name="r",
+                  clusters=[4, 5, 6, 7]),
+        GraphNode(job, {"x": Ref("l"), "y": Ref("r")}, name="join"),
+    ]
+
+
+def bench_graphs() -> dict:
+    """name -> GraphNode list (the real-mesh graphs `_real_rows` runs),
+    collected by the ``make verify-graphs`` zero-diagnostics gate.
+    Operand dtype is irrelevant to verification, so plain numpy."""
+    import numpy as np
+
+    job = jobs.make_axpy(2048)
+    ops, _ = job.make_instance(0)
+    ops = {k: np.asarray(v) for k, v in ops.items()}
+    return {"dag/chain": _chain_nodes(job, ops),
+            "dag/diamond": _diamond_nodes(job, ops)}
+
+
 def _real_rows() -> Tuple[List[Row], dict]:
     """8-device mesh: the graph path's byte counters and bit-identity."""
     import jax.numpy as jnp
     import numpy as np
-    from repro.core.scoreboard import GraphNode, Ref
     from repro.core.session import Session
 
     job = jobs.make_axpy(2048)
@@ -126,10 +164,7 @@ def _real_rows() -> Tuple[List[Row], dict]:
     ops = {k: np.asarray(v, dtype=dt) for k, v in ops.items()}
 
     sess = Session()
-    nodes = [GraphNode(job, ops, name="n0")]
-    for k in range(1, CHAIN_K):
-        nodes.append(GraphNode(job, {"x": ops["x"], "y": Ref(f"n{k-1}")},
-                               name=f"n{k}"))
+    nodes = _chain_nodes(job, ops)
     gh = sess.submit_graph(nodes)
     out = gh.wait()
     final = out[f"n{CHAIN_K - 1}"]
@@ -146,19 +181,33 @@ def _real_rows() -> Tuple[List[Row], dict]:
     bit_identical = float(np.array_equal(np.asarray(final), np.asarray(r)))
     assert bit_identical == 1.0
 
-    diamond = [
-        GraphNode(job, ops, name="src"),
-        GraphNode(job, {"x": ops["x"], "y": Ref("src")}, name="l",
-                  clusters=[0, 1, 2, 3]),
-        GraphNode(job, {"x": ops["x"], "y": Ref("src")}, name="r",
-                  clusters=[4, 5, 6, 7]),
-        GraphNode(job, {"x": Ref("l"), "y": Ref("r")}, name="join"),
-    ]
-    gd = sess.submit_graph(diamond)
+    gd = sess.submit_graph(_diamond_nodes(job, ops))
     gd.wait()
     assert gd.max_inflight >= 2
     sess.drain()
     seq.drain()
+
+    # ISSUE-9: static verification overhead vs a warm dispatch of the
+    # same K=8 chain.  Both sides are wallclock; the dispatch side
+    # re-runs submit_graph (verifier on, cached plans) so the ratio is
+    # conservative.
+    import time
+
+    from repro.analysis import verify_graph
+
+    reps = 20
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        diags = verify_graph(nodes, n_units=sess.n_units,
+                             default_width=8, session=sess)
+    t_verify = (time.perf_counter() - t0) / reps
+    assert not diags, diags
+    t0 = time.perf_counter()
+    sess.submit_graph(nodes).wait()
+    t_dispatch = time.perf_counter() - t0
+    verify_pct = 100.0 * t_verify / t_dispatch
+    assert verify_pct < VERIFY_BAR, (t_verify, t_dispatch)
+
     rows = [
         ("dag/real/chain_intermediate_d2h", intermediate_d2h, "bytes"),
         ("dag/real/chain_forwards", float(CHAIN_K - 1), "count"),
@@ -166,9 +215,12 @@ def _real_rows() -> Tuple[List[Row], dict]:
         ("dag/real/diamond_max_inflight", float(gd.max_inflight), "count"),
         ("dag/real/seq_d2h_over_graph",
          float(seq.stats.d2h_bytes) / float(final.nbytes), "speedup"),
+        ("dag/verify/chain_us", 1e6 * t_verify, "us"),
+        ("dag/verify/overhead_pct", verify_pct, "percent"),
     ]
     return rows, {"max_inflight": gd.max_inflight,
-                  "seq_d2h": seq.stats.d2h_bytes}
+                  "seq_d2h": seq.stats.d2h_bytes,
+                  "verify_pct": verify_pct}
 
 
 def dag_suite() -> Tuple[List[Row], str]:
@@ -180,5 +232,7 @@ def dag_suite() -> Tuple[List[Row], str]:
         f"(bar <= {RATIO_BAR}x), intermediate d2h exactly 0 bytes, "
         "bit-identical to sequential; diamond arms overlap "
         f"{model['overlap']:.2f}x (bar >= {OVERLAP_BAR}x); model error "
-        f"max {max(model['errs']):.2f}% (paper bar < {MODEL_BAR:.0f}%)")
+        f"max {max(model['errs']):.2f}% (paper bar < {MODEL_BAR:.0f}%); "
+        f"static verify overhead {real['verify_pct']:.2f}% of a warm "
+        f"dispatch (bar < {VERIFY_BAR:.0f}%)")
     return rows, derived

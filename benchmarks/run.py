@@ -74,7 +74,7 @@ CI_SUITES = ("fig07", "fig12", "staging", "session", "scheduler", "faults",
              "preempt", "dag")
 
 #: row-name fragments excluded from --check (compile-dominated, unbounded noise)
-CHECK_SKIP = ("/cold", "/error", "unix_time")
+CHECK_SKIP = ("/cold", "/error", "unix_time", "/verify/")
 
 
 def _direction(unit: str) -> str:

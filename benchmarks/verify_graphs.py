@@ -1,0 +1,62 @@
+"""``make verify-graphs`` — zero-diagnostics gate over checked-in graphs.
+
+Collects every job graph the repo ships — the example graphs
+(``examples/job_graph.py:build_graphs``) and the real-mesh benchmark
+graphs (``benchmarks/dag_bench.py:bench_graphs``) — and runs the static
+verifier over each.  Any diagnostic (including warnings) fails the
+gate: checked-in graphs are documentation, and documentation with
+latent hazards teaches the hazard.
+
+    PYTHONPATH=src python benchmarks/verify_graphs.py
+
+Exit status: 0 when every graph verifies clean, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for sub in ("examples", "benchmarks"):
+    p = str(_ROOT / sub)
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+#: mesh width the CI bench mesh uses; sharded-divisibility checks run
+#: against it even though verification itself never touches a device
+MESH_WIDTH = 8
+
+
+def collect() -> dict:
+    """name -> GraphNode list from every registered graph source."""
+    import dag_bench
+    import job_graph
+
+    graphs: dict = {}
+    for source, builder in (("examples/job_graph", job_graph.build_graphs),
+                            ("benchmarks/dag_bench", dag_bench.bench_graphs)):
+        for name, nodes in builder().items():
+            graphs[f"{source}:{name}"] = nodes
+    return graphs
+
+
+def main() -> int:
+    from repro.analysis import verify_graph
+
+    graphs = collect()
+    failed = 0
+    for name, nodes in sorted(graphs.items()):
+        diags = verify_graph(nodes, default_width=MESH_WIDTH)
+        status = "ok" if not diags else f"{len(diags)} diagnostic(s)"
+        print(f"  {name:45s} {len(nodes):3d} nodes  {status}")
+        for d in diags:
+            print(f"    {d}")
+        failed += bool(diags)
+    total = len(graphs)
+    print(f"verify-graphs: {total - failed}/{total} graphs clean")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,240 @@
+"""The stable diagnostic vocabulary of the static offload verifier.
+
+Eight PRs of runtime invariants — donation rules, WAR/WAW renaming,
+lease residency, policy contradictions, in-flight window bounds — were
+each enforced by a scattered ad-hoc exception that fired *after*
+dispatch.  This module is the compiler-front-end answer: one table of
+stable ``OFL###`` codes, each with a severity, a one-line title, and a
+long-form ``explain()`` text, plus the typed :class:`Diagnostic` record
+every verifier pass and every legacy-exception shim reports through.
+
+The module is deliberately dependency-free (no jax, no other ``repro``
+imports): :mod:`repro.core.policy` raises through it from failure
+branches, so it must sit below every core module in the import graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+from typing import Any, Dict, Mapping, Optional, Tuple, Type
+
+__all__ = [
+    "CODES", "Diagnostic", "Severity", "contradiction", "explain",
+    "invalid_field", "invalid_mode", "use_after_donate",
+]
+
+
+class Severity(str, enum.Enum):
+    """How a diagnostic gates a submit: ``ERROR`` raises before any
+    staging, ``WARNING`` is advisory (the runtime handles the hazard —
+    e.g. by renaming — but the descriptor could be cheaper without it).
+    """
+
+    ERROR = "error"
+    WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class _CodeInfo:
+    title: str
+    severity: Severity
+    explain: str
+
+
+#: The stable code table.  Codes are append-only: a released code keeps
+#: its number and meaning forever (tests snapshot this table the way
+#: ``tests/test_api_surface.py`` snapshots the API).
+CODES: Dict[str, _CodeInfo] = {
+    "OFL001": _CodeInfo(
+        "dependency cycle", Severity.ERROR,
+        "The graph's dataflow (Ref operands) and ordering (after=) edges "
+        "form a cycle, so no issue order exists: the scoreboard could "
+        "never find a ready node.  A node depending on itself is the "
+        "degenerate one-node cycle.  Break the cycle by removing an edge "
+        "or splitting the graph into two submits."),
+    "OFL002": _CodeInfo(
+        "dangling or malformed node reference", Severity.ERROR,
+        "A Ref or after= entry names a node that does not exist (unknown "
+        "name, index outside the node list), two nodes share a name, an "
+        "entry is not a GraphNode, a node's operands are not a mapping "
+        "or Residency.RESIDENT, or the graph is empty.  The reference "
+        "can never resolve to a producer result."),
+    "OFL003": _CodeInfo(
+        "use-after-donate", Severity.ERROR,
+        "An operand (or forwarded producer result) is a device buffer "
+        "that a donating dispatch already consumed — XLA deleted it on "
+        "launch.  Restage the value from its host copy "
+        "(plan.resident_operands restores resident buffers "
+        "automatically) or disable donate_operands for buffers that "
+        "must stay readable."),
+    "OFL004": _CodeInfo(
+        "WAR/WAW rename required", Severity.WARNING,
+        "Under donate_operands a consumer launch would consume a "
+        "forwarded producer buffer that other readers (or a later "
+        "fetch) still need.  The graph dispatcher renames — copies — "
+        "the buffer before the donating consumer, so the run is "
+        "correct, but each such edge pays one device-side copy "
+        "(PlanStats.renames).  Disable donation for the graph policy "
+        "to forward by aliasing instead."),
+    "OFL005": _CodeInfo(
+        "cross-lease circular wait", Severity.WARNING,
+        "The graph's dependency edges cross session leases in a cycle "
+        "(lease A waits on lease B which waits on lease A).  The "
+        "single-host scoreboard still finds an issue order, but the "
+        "leases cannot drain independently — a distributed dispatcher "
+        "would deadlock.  Restructure so cross-lease edges flow one "
+        "way, or keep the cyclic portion inside one lease."),
+    "OFL006": _CodeInfo(
+        "sharding mismatch", Severity.ERROR,
+        "An operand's shard axis is not divisible by the node's cluster "
+        "selection, or a forwarded producer result's shape cannot "
+        "satisfy the consumer kernel — the dispatch plan could never "
+        "build.  Resize the operand, change the selection width, or fix "
+        "the forward edge."),
+    "OFL007": _CodeInfo(
+        "graph width exceeds the in-flight window", Severity.WARNING,
+        "More nodes become ready at once than the in-flight window "
+        "(policy.window, capped by the runtime's completion-unit "
+        "copies) can hold, so issue will stall draining the oldest "
+        "in-flight job (InflightWindow.stalls counts these).  Raise "
+        "policy.window / n_units, or narrow the graph."),
+    "OFL008": _CodeInfo(
+        "invalid mode value", Severity.ERROR,
+        "A mode field (staging, residency, info_dist, completion, via) "
+        "is not a member of its enum — a typo like "
+        "info_dist='mulitcast' would otherwise silently misconfigure "
+        "the run.  Use the typed enums from repro.api."),
+    "OFL009": _CodeInfo(
+        "invalid policy field", Severity.ERROR,
+        "A numeric or typed policy field is out of range: fuse/window/"
+        "depth below 1, RetryPolicy bounds (max_attempts >= 1, "
+        "deadline_factor > 1, backoff >= 1), or a field of the wrong "
+        "type."),
+    "OFL010": _CodeInfo(
+        "policy contradiction", Severity.ERROR,
+        "Two policy fields cannot hold at once: residency=RESIDENT "
+        "stages no operands so a pinned non-DIRECT staging could never "
+        "run, and graph submits do not ride the retry/deadline ladder "
+        "(policy.retry must be None for submit_graph)."),
+    "OFL011": _CodeInfo(
+        "inactive lease", Severity.ERROR,
+        "The submit targets a lease that is no longer active — it was "
+        "released, revoked, or superseded by a resize.  Request a new "
+        "lease from the scheduler (or use the current lease object) "
+        "before submitting."),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One typed finding of the static verifier (or a runtime shim).
+
+    ``code`` indexes :data:`CODES`; ``node``/``name`` locate the
+    offending graph node (index and, when it has one, its
+    ``GraphNode.name`` — or the offending policy/operand field);
+    ``suggestion`` is the actionable fix (defaulted from the code
+    table's explain text when left empty).
+    """
+
+    code: str
+    message: str
+    severity: Severity = Severity.ERROR
+    node: Optional[int] = None
+    name: Optional[str] = None
+    suggestion: str = ""
+
+    def __post_init__(self) -> None:
+        if self.code not in CODES:
+            raise ValueError(f"unknown diagnostic code {self.code!r} "
+                             f"(known: {sorted(CODES)})")
+        info = CODES[self.code]
+        object.__setattr__(self, "severity", Severity(self.severity))
+        if not self.suggestion:
+            object.__setattr__(self, "suggestion", info.explain)
+
+    @property
+    def title(self) -> str:
+        return CODES[self.code].title
+
+    def __str__(self) -> str:
+        where = ""
+        if self.node is not None:
+            where = f" [node {self.node}" + (
+                f" ({self.name})]" if self.name else "]")
+        elif self.name is not None:
+            where = f" [{self.name}]"
+        return f"{self.code}: {self.message}{where}"
+
+    def to_json(self) -> str:
+        """Stable JSON serialization (round-trips via :meth:`from_json`)."""
+        return json.dumps({
+            "code": self.code,
+            "title": self.title,
+            "severity": self.severity.value,
+            "message": self.message,
+            "node": self.node,
+            "name": self.name,
+            "suggestion": self.suggestion,
+        }, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "Diagnostic":
+        d: Mapping[str, Any] = json.loads(payload)
+        return cls(code=d["code"], message=d["message"],
+                   severity=Severity(d["severity"]), node=d.get("node"),
+                   name=d.get("name"), suggestion=d.get("suggestion", ""))
+
+    def as_error(self, cls: Type[Exception] = ValueError) -> Exception:
+        """This diagnostic as a raisable exception of type ``cls``.
+
+        The legacy-exception shims use this: the raised error keeps its
+        historical type (so existing ``except`` clauses keep working)
+        while carrying ``.code`` and ``.diagnostic`` for new callers.
+        """
+        err = cls(str(self))
+        err.code = self.code                 # type: ignore[attr-defined]
+        err.diagnostic = self                # type: ignore[attr-defined]
+        return err
+
+
+def explain(code: str) -> str:
+    """Long-form explanation of a diagnostic code (``OFL001``...)."""
+    info = CODES.get(code)
+    if info is None:
+        raise KeyError(f"unknown diagnostic code {code!r} "
+                       f"(known: {sorted(CODES)})")
+    return f"{code} [{info.severity.value}] {info.title}: {info.explain}"
+
+
+# -- shim constructors (the core modules raise through these) ----------------
+
+
+def invalid_mode(field: str, value: Any,
+                 valid: Tuple[str, ...]) -> Diagnostic:
+    """OFL008: an enum-valued mode field rejected a value."""
+    return Diagnostic("OFL008", f"{field} {value!r} not in {valid}",
+                      name=field)
+
+
+def invalid_field(field: str, message: str) -> Diagnostic:
+    """OFL009: a policy field failed its range/type validation."""
+    return Diagnostic("OFL009", message, name=field)
+
+
+def contradiction(message: str, name: Optional[str] = None) -> Diagnostic:
+    """OFL010: two policy fields cannot hold at once."""
+    return Diagnostic("OFL010", message, name=name)
+
+
+def use_after_donate(what: str, node: Optional[int] = None,
+                     name: Optional[str] = None) -> Diagnostic:
+    """OFL003: a donated (deleted) device buffer would be read."""
+    return Diagnostic(
+        "OFL003", f"{what} was deleted by a donating dispatch",
+        node=node, name=name,
+        suggestion=(
+            "restage it from the host copy (plan.resident_operands "
+            "restores resident buffers automatically) or disable "
+            "donate_operands for buffers that must stay readable"))

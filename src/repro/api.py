@@ -17,7 +17,12 @@ with the typed :class:`Overloaded` error, and the graceful-degradation
 ladder; README "Preemption & overload"), and dependent job graphs
 (:meth:`Session.submit_graph` over :class:`GraphNode`/:class:`Ref` —
 scoreboarded out-of-order dispatch with device-to-device result
-forwarding; README "Dependent job graphs").
+forwarding; README "Dependent job graphs"), and the static analysis
+surface (:func:`verify` / :func:`verify_graph` / :func:`verify_policy`
+reporting typed :class:`Diagnostic`\\ s with stable ``OFL###`` codes,
+the :class:`VerificationError` submit gate, and the
+``REPRO_SANITIZE=1`` hazard sanitizer; README "Static verification &
+sanitizer").
 
 Quickstart::
 
@@ -39,6 +44,16 @@ working behind :class:`DeprecationWarning` shims; the README's "Session
 API" section has the migration table.
 """
 
+from repro.analysis import (
+    Diagnostic,
+    SanitizerError,
+    Severity,
+    VerificationError,
+    explain,
+    verify,
+    verify_graph,
+    verify_policy,
+)
 from repro.core.fabric import (
     ClusterLease,
     FabricHealth,
@@ -107,6 +122,7 @@ __all__ = [
     "ClusterLease",
     "Completion",
     "CompletionTimeout",
+    "Diagnostic",
     "DonatedOperandError",
     "Estimate",
     "Explain",
@@ -139,6 +155,7 @@ __all__ = [
     "ReliableHandle",
     "Residency",
     "RetryPolicy",
+    "SanitizerError",
     "SchedulerPolicy",
     "Scoreboard",
     "ServeConfig",
@@ -147,15 +164,21 @@ __all__ = [
     "Session",
     "SessionHandle",
     "SessionHealth",
+    "Severity",
     "Staging",
     "StepWatchdog",
     "Tenant",
     "TenantKind",
+    "VerificationError",
     "WatchdogConfig",
     "deadline_cycles",
     "elastic_restore",
     "estimate",
+    "explain",
     "make_instances",
     "predict_recovery",
     "predict_staging",
+    "verify",
+    "verify_graph",
+    "verify_policy",
 ]

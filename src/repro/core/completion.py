@@ -28,6 +28,8 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import sanitizer as _san
+
 
 # ---------------------------------------------------------------------------
 # Device-side completion collectives (used inside shard_map).
@@ -95,6 +97,9 @@ class CompletionUnit:
             raise RuntimeError(f"unit {job_id} already tracking an offload")
         if n_clusters <= 0:
             raise ValueError("n_clusters must be positive")
+        s = _san.active()
+        if s is not None:
+            s.unit_program(self, job_id)
         regs.offload = n_clusters
         regs.arrivals = 0
 
@@ -134,6 +139,9 @@ class CompletionUnit:
         errors (the host-side analogue of the deferred-interrupt replay in
         fig. 6).
         """
+        s = _san.active()
+        if s is not None:
+            s.unit_collect(self, job_id)
         if job_id in self._collected:
             self._collected.discard(job_id)
             return
@@ -162,6 +170,9 @@ class CompletionUnit:
         path), the stale cause must not fire for, or be collected by, a
         later job sharing the unit.
         """
+        s = _san.active()
+        if s is not None:
+            s.unit_cancel(self, job_id)
         regs = self._regs[job_id % len(self._regs)]
         missing = 0
         if regs.offload != 0:

@@ -56,6 +56,7 @@ import itertools
 import weakref
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.analysis import sanitizer as _san
 from repro.core import broadcast as bc
 from repro.core import multicast as mc
 from repro.core import simulator
@@ -634,6 +635,9 @@ class FabricScheduler:
         lease = ClusterLease(
             lease_id if lease_id is not None else next(self._next_id),
             tenant, window, scheduler=self)
+        s = _san.active()
+        if s is not None:
+            s.lease_grant(lease.lease_id, tuple(window), self._owner)
         for c in window:
             self._owner[c] = lease.lease_id
         self._leases[lease.lease_id] = lease

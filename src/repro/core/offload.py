@@ -117,6 +117,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis import sanitizer as _san
 from repro.compat import shard_map
 from repro.core import broadcast as bc
 from repro.core import multicast as mc
@@ -257,7 +258,12 @@ class DonatedOperandError(RuntimeError):
     copy — the buffer before the donating consumer).
     """
 
+    #: stable diagnostic code (``repro.analysis.diagnostics.CODES``)
+    code = "OFL003"
+
     def __init__(self, what: str):
+        from repro.analysis.diagnostics import use_after_donate
+        self.diagnostic = use_after_donate(what)
         super().__init__(
             f"{what} was deleted by a donating dispatch; restage it from "
             "the host copy (plan.resident_operands restores resident "
@@ -354,6 +360,9 @@ class JobHandle:
         if self._done:
             return self._data
         _check_live(self.result, f"job {self.job_id}'s result buffer")
+        s = _san.active()
+        if s is not None:
+            s.read(self.result, f"wait() on job {self.job_id}")
         if self._retired:
             data = jax.device_get(self.result)
         else:
@@ -545,6 +554,10 @@ class DispatchPlan:
             # slot buffers are single-use: each stream submit stages fresh
             # operands, so a donated dispatch consuming them needs no redo
             self._slots[slot] = staged
+        s = _san.active()
+        if s is not None:
+            for name, buf in staged.items():
+                s.track(buf, f"staged operand {name!r}")
         return staged
 
     def forward(self, name: str, value: Any, *,
@@ -570,6 +583,9 @@ class DispatchPlan:
         if name not in names:
             raise ValueError(f"operand {name!r} not in plan {names}")
         _check_live(value, f"forwarded operand {name!r}")
+        s = _san.active()
+        if s is not None:
+            s.read(value, f"forward of operand {name!r}")
         shape, dtype = next((s, d) for n, s, d in self.op_meta if n == name)
         if tuple(value.shape) != shape or str(value.dtype) != dtype:
             raise ValueError(
@@ -599,6 +615,8 @@ class DispatchPlan:
             moved = value.nbytes
             self.stats.forward_bytes += moved
         self.stats.forwards += 1
+        if s is not None and staged is not value:
+            s.track(staged, f"forwarded operand {name!r}")
         return staged, moved
 
     def stage_renamed(self, operands: Dict[str, Any], *,
@@ -637,10 +655,20 @@ class DispatchPlan:
                         f"{dtype}")
                 staged[name] = self._put(arr, self.op_shardings[name], via)
                 self.stats.device_puts += 1
+                s = _san.active()
+                if s is not None:
+                    s.track(staged[name], f"renamed operand {name!r}")
         return staged, fwd_bytes
 
     def invalidate(self, names: Optional[Sequence[str]] = None) -> None:
         """Drop resident operand buffers (all, or a named subset)."""
+        s = _san.active()
+        if s is not None:
+            dropped = (self._resident.items() if names is None else
+                       ((n, self._resident[n]) for n in names
+                        if n in self._resident))
+            for name, buf in dropped:
+                s.revoke(buf, f"resident operand {name!r}")
         if names is None:
             self._resident.clear()
             self._resident_src.clear()
@@ -666,6 +694,10 @@ class DispatchPlan:
                 "with real operands (or call plan.stage) before "
                 "offload(job, 'resident', ...)")
         self.stats.resident_hits += len(self.op_meta)
+        s = _san.active()
+        if s is not None:
+            for name, buf in self._resident.items():
+                s.read(buf, f"resident operand {name!r}")
         return dict(self._resident)
 
     def stage_args(self, job_args: np.ndarray, *,
@@ -993,9 +1025,21 @@ class OffloadRuntime:
             # effect (dropped arrivals / virtual delay) deterministically
             self.fault_injector.on_dispatch(self, job_id, plan.cluster_ids,
                                             plan.job.spec)
+        s = _san.active()
+        if s is not None:
+            # op_dev may alias plan._resident, which a donating
+            # _after_dispatch clears — snapshot the buffers first
+            op_bufs = [(name, op_dev[name]) for name, _, _ in plan.op_meta]
+            for name, buf in op_bufs:
+                s.read(buf, f"launch {job_id} operand {name!r}")
         result, arrivals = plan.fn(
             args_dev, *(op_dev[name] for name, _, _ in plan.op_meta))
         plan._after_dispatch(consumed_resident=consumed_resident)
+        if s is not None:
+            if self.config.donate_operands:
+                for name, buf in op_bufs:
+                    s.donate(buf, f"operand {name!r}")
+            s.track(result, f"job {job_id}'s result buffer")
         return JobHandle(job_id, result, arrivals, plan.n_clusters,
                          time.monotonic(), self, plan.cluster_ids, plan)
 

@@ -99,9 +99,9 @@ def coerce_enum(enum_cls: Type[_E], value: Union[str, _E], field: str,
     try:
         member = enum_cls(value)
     except ValueError:
+        from repro.analysis.diagnostics import invalid_mode
         valid = tuple(m.value for m in enum_cls)
-        raise ValueError(
-            f"{field} {value!r} not in {valid}") from None
+        raise invalid_mode(field, value, valid).as_error(ValueError) from None
     if warn_legacy:
         warnings.warn(
             f"passing {field} as a raw string ({value!r}) is deprecated; "
@@ -146,15 +146,22 @@ class RetryPolicy:
     failover: bool = True
 
     def __post_init__(self) -> None:
+        from repro.analysis.diagnostics import invalid_field
         if self.max_attempts < 1:
-            raise ValueError(
-                f"max_attempts must be >= 1, got {self.max_attempts}")
+            raise invalid_field(
+                "max_attempts",
+                f"max_attempts must be >= 1, got {self.max_attempts}"
+            ).as_error(ValueError)
         if self.deadline_factor <= 1.0:
-            raise ValueError(
+            raise invalid_field(
+                "deadline_factor",
                 f"deadline_factor must be > 1 (a deadline at or below the "
-                f"prediction trips every job), got {self.deadline_factor}")
+                f"prediction trips every job), got {self.deadline_factor}"
+            ).as_error(ValueError)
         if self.backoff < 1.0:
-            raise ValueError(f"backoff must be >= 1, got {self.backoff}")
+            raise invalid_field(
+                "backoff", f"backoff must be >= 1, got {self.backoff}"
+            ).as_error(ValueError)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,12 +213,18 @@ class OffloadPolicy:
         coerce(self, "completion",
                coerce_enum(Completion, self.completion, "completion"))
         if self.retry is not None and not isinstance(self.retry, RetryPolicy):
-            raise TypeError(
-                f"retry must be a RetryPolicy, got {type(self.retry).__name__}")
+            from repro.analysis.diagnostics import invalid_field
+            raise invalid_field(
+                "retry", f"retry must be a RetryPolicy, got "
+                         f"{type(self.retry).__name__}"
+            ).as_error(TypeError)
         for field, lo in (("fuse", 1), ("window", 1), ("depth", 1)):
             v = getattr(self, field)
             if v is not None and (not isinstance(v, int) or v < lo):
-                raise ValueError(f"{field} must be an int >= {lo}, got {v!r}")
+                from repro.analysis.diagnostics import invalid_field
+                raise invalid_field(
+                    field, f"{field} must be an int >= {lo}, got {v!r}"
+                ).as_error(ValueError)
         # cross-field contradictions fail at construction, not mid-dispatch:
         # a RESIDENT submit stages nothing, so a pinned non-DIRECT staging
         # strategy could never run — silently ignoring it would misreport
@@ -219,10 +232,12 @@ class OffloadPolicy:
         if (self.residency is Residency.RESIDENT
                 and self.staging is not None
                 and self.staging is not Staging.DIRECT):
-            raise ValueError(
+            from repro.analysis.diagnostics import contradiction
+            raise contradiction(
                 f"residency=RESIDENT stages no operands; pinning "
                 f"staging={self.staging.value!r} is contradictory (leave "
-                "staging unset or DIRECT)")
+                "staging unset or DIRECT)", name="staging"
+            ).as_error(ValueError)
 
     @property
     def decided(self) -> bool:

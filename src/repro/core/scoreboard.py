@@ -44,6 +44,8 @@ from typing import (
     Sequence, Tuple, Union,
 )
 
+from repro.analysis import sanitizer as _san
+
 __all__ = [
     "GraphError", "GraphNode", "InflightWindow", "Ref", "Scoreboard",
     "resolve_graph",
@@ -237,6 +239,9 @@ class Scoreboard:
             raise GraphError(
                 f"node {i} is not ready: {self._unissued_preds[i]} "
                 "unissued predecessors")
+        s = _san.active()
+        if s is not None:
+            s.sb_issue(self, i, self.deps[i])
         self.state[i] = ISSUED
         self.issue_order.append(i)
         self._inflight += 1
@@ -252,6 +257,9 @@ class Scoreboard:
         issue order of *other* nodes."""
         if self.state[i] != ISSUED:
             raise GraphError(f"cannot retire node {i}: {self.state[i]}")
+        s = _san.active()
+        if s is not None:
+            s.sb_retire(self, i)
         self.state[i] = RETIRED
         self.retire_order.append(i)
         self._inflight -= 1

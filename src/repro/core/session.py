@@ -662,7 +662,8 @@ class Session:
                  params: OccamyParams = DEFAULT_PARAMS,
                  planner: Optional[Planner] = None,
                  runtime: Optional[OffloadRuntime] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 verify: bool = True):
         if runtime is not None and devices is not None:
             raise ValueError("give devices or a runtime, not both")
         if lease is not None and (devices is not None or runtime is not None):
@@ -672,6 +673,7 @@ class Session:
                             f"{type(policy).__name__}")
         self.policy = policy
         self.n_units = n_units
+        self.verify = bool(verify)
         self.params = params
         self.planner = planner or Planner(params)
         self._faults = faults
@@ -894,6 +896,8 @@ class Session:
             raise ValueError("empty instance list")
         if not multi and not resident and not isinstance(operands, Mapping):
             raise TypeError(f"unsupported operands {type(operands)!r}")
+        if self.verify and not resident:
+            self._verify_submit(job, operands, n, request, clusters)
 
         ids, n = self._selection_ids(pol, n, request, clusters)
         if after:
@@ -976,6 +980,35 @@ class Session:
         return SessionHandle(self, job, est, parts, multi or
                              (resident and decision.fuse > 1), plans, t0)
 
+    def _verify_submit(self, job: PaperJob, operands: Any, n, request,
+                       clusters) -> None:
+        """The static pre-dispatch gate (``Session(verify=False)`` skips).
+
+        Use-after-donate (OFL003) raises the historical
+        :class:`~repro.core.offload.DonatedOperandError` — now *before*
+        any staging instead of at wait time; other error diagnostics
+        (sharding mismatch OFL006, inactive lease OFL011) raise
+        :class:`~repro.analysis.verifier.VerificationError`.
+        """
+        from repro.analysis import verifier as _verifier
+        from repro.analysis.diagnostics import Severity
+        if n is None and request is None and clusters is None:
+            n = len(self._devices)
+        diags = _verifier.verify(job, lease=self._lease, operands=operands,
+                                 n=None if request is not None else n,
+                                 clusters=clusters, n_units=self.n_units)
+        errors = [d for d in diags if d.severity is Severity.ERROR]
+        if not errors:
+            return
+        donated = [d for d in errors if d.code == "OFL003"]
+        if donated:
+            from repro.core.offload import DonatedOperandError
+            # the diagnostic message is "<what> was deleted by ...": hand
+            # the <what> back to the historical exception type
+            what = donated[0].message.split(" was deleted by ")[0]
+            raise DonatedOperandError(what)
+        raise _verifier.VerificationError(errors)
+
     @staticmethod
     def _job_handles_of(h: Any) -> List[JobHandle]:
         """Flatten an ``after=`` predecessor to its raw job handles."""
@@ -1029,6 +1062,11 @@ class Session:
                 raise GraphError(
                     f"submit_graph takes GraphNode entries, got "
                     f"{type(nd).__name__}")
+        if self.verify:
+            from repro.analysis import verifier as _verifier
+            _verifier.raise_errors(_verifier.verify_graph(
+                nodes, policy=pol, n_units=self.n_units,
+                default_width=len(self._devices), session=self))
         deps, data_edges = resolve_graph(nodes)
         sb = Scoreboard(deps)
         targets: List["Session"] = []

@@ -33,8 +33,8 @@ def _params(fn):
 
 EXPORTS = (
     "AUTO", "BackupOffload", "ClusterLease", "Completion",
-    "CompletionTimeout", "DonatedOperandError", "Estimate", "Explain",
-    "FabricHealth",
+    "CompletionTimeout", "Diagnostic", "DonatedOperandError", "Estimate",
+    "Explain", "FabricHealth",
     "FabricScheduler", "FaultError", "FaultInjector", "FaultKind",
     "FaultPlan", "FaultSpec", "GraphError", "GraphHandle", "GraphNode",
     "InfoDist", "JobHandle", "LeaseError",
@@ -42,12 +42,16 @@ EXPORTS = (
     "OffloadRuntime", "Overloaded", "PAPER_JOBS", "PaperJob", "PendingLease",
     "PlanDecision", "PlanStats",
     "Planner", "Ref", "ReliableHandle", "Residency", "RetryPolicy",
+    "SanitizerError",
     "SchedulerPolicy", "Scoreboard", "ServeConfig", "ServeEngine",
     "ServeTenant",
-    "Session", "SessionHandle", "SessionHealth", "Staging", "StepWatchdog",
-    "Tenant", "TenantKind", "WatchdogConfig", "deadline_cycles",
-    "elastic_restore", "estimate", "make_instances", "predict_recovery",
-    "predict_staging",
+    "Session", "SessionHandle", "SessionHealth", "Severity", "Staging",
+    "StepWatchdog",
+    "Tenant", "TenantKind", "VerificationError", "WatchdogConfig",
+    "deadline_cycles",
+    "elastic_restore", "estimate", "explain", "make_instances",
+    "predict_recovery",
+    "predict_staging", "verify", "verify_graph", "verify_policy",
 )
 
 ENUMS = {
@@ -55,6 +59,7 @@ ENUMS = {
     "Residency": ("FRESH", "RESIDENT"),
     "InfoDist": ("MULTICAST", "P2P_CHAIN"),
     "Completion": ("UNIT", "CENTRAL_COUNTER"),
+    "Severity": ("ERROR", "WARNING"),
     "TenantKind": ("OFFLOAD", "SERVE"),
     "FaultKind": ("CLUSTER_DEATH", "STRAGGLE", "HOST_LINK_STALL",
                   "LOST_ARRIVAL"),
@@ -73,7 +78,7 @@ SNAPSHOT = {
     "Planner.decide": ("job", "clusters", "batch", "policy", "n_units",
                        "operands="),
     "Session": ("devices=", "lease=", "policy=", "n_units=", "params=",
-                "planner=", "runtime=", "faults="),
+                "planner=", "runtime=", "faults=", "verify="),
     "Session.submit": ("job", "operands", "policy=", "job_args=", "n=",
                        "request=", "clusters=", "after="),
     "Session.submit_graph": ("nodes", "policy="),
@@ -140,6 +145,17 @@ SNAPSHOT = {
                     "staging="),
     "ServeEngine.generate": ("prompts", "n_new", "extra_inputs="),
     "ServeEngine.generate_many": ("requests", "arrival_steps="),
+    "Diagnostic": ("code", "message", "severity=", "node=", "name=",
+                   "suggestion="),
+    "Diagnostic.to_json": (),
+    "Diagnostic.from_json": ("payload",),
+    "Diagnostic.as_error": ("cls=",),
+    "explain": ("code",),
+    "verify": ("job", "policy=", "lease=", "operands=", "n=", "clusters=",
+               "n_units="),
+    "verify_graph": ("nodes", "policy=", "n_units=", "default_width=",
+                     "session="),
+    "verify_policy": ("policy=", "**fields"),
 }
 
 
