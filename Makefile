@@ -1,10 +1,10 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: check test typecheck bench-smoke bench-offload verify-graphs
+.PHONY: check test typecheck bench-smoke bench-offload verify-graphs lint-graphs
 
 # Tier-1 verify: full test suite + a benchmark smoke (what CI runs).
-check: test typecheck bench-smoke verify-graphs
+check: test typecheck bench-smoke verify-graphs lint-graphs
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -16,7 +16,8 @@ test:
 typecheck:
 	@if $(PYTHON) -c "import mypy" 2>/dev/null; then \
 		$(PYTHON) -m mypy --config-file mypy.ini \
-			src/repro/api.py src/repro/core/ src/repro/analysis/ \
+			src/repro/api.py src/repro/lint.py src/repro/core/ \
+			src/repro/analysis/ \
 			src/repro/serve/engine.py src/repro/ft/; \
 	else \
 		echo "mypy not installed; skipping typecheck"; \
@@ -27,13 +28,19 @@ typecheck:
 verify-graphs:
 	$(PYTHON) benchmarks/verify_graphs.py
 
+# Zero-new-findings perf gate: the same graphs through the perf linter;
+# `# repro: allow(...)` comments and LINT_baseline.json absorb the
+# accepted debt, anything else fails (python -m repro.lint --help).
+lint-graphs:
+	$(PYTHON) -m repro.lint
+
 bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-		$(PYTHON) -m benchmarks.run --only fig07,fig12,staging,session,scheduler,faults,preempt,dag --check BENCH_offload.json
+		$(PYTHON) -m benchmarks.run --only fig07,fig12,staging,session,scheduler,faults,preempt,dag,perflint --check BENCH_offload.json
 
 # The tracked dispatch-overhead trajectory (writes BENCH_offload.json).
 bench-offload:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PYTHON) -m benchmarks.run \
-			--only offload,stream,serve_stream,staging,staging_wall,session,scheduler,faults,preempt,dag,fig07,fig09,fig12 \
+			--only offload,stream,serve_stream,staging,staging_wall,session,scheduler,faults,preempt,dag,perflint,fig07,fig09,fig12 \
 			--json BENCH_offload.json

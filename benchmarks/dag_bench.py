@@ -137,6 +137,21 @@ def _diamond_nodes(job, ops):
     ]
 
 
+def _serial_nodes(job, ops):
+    from repro.core.scoreboard import GraphNode, Ref
+
+    # serial wide -> narrow -> wide: both edges pay a d2d forward on
+    # the critical path.  Kept as checked-in OFLP104 debt on purpose —
+    # LINT_baseline.json carries its two findings, so `make
+    # lint-graphs` stays green here but fails on *new* regressions.
+    return [
+        GraphNode(job, ops, name="wide"),
+        GraphNode(job, {"x": ops["x"], "y": Ref("wide")}, name="narrow",
+                  clusters=[0, 1, 2, 3]),
+        GraphNode(job, {"x": ops["x"], "y": Ref("narrow")}, name="tail"),
+    ]
+
+
 def bench_graphs() -> dict:
     """name -> GraphNode list (the real-mesh graphs `_real_rows` runs),
     collected by the ``make verify-graphs`` zero-diagnostics gate.
@@ -147,7 +162,8 @@ def bench_graphs() -> dict:
     ops, _ = job.make_instance(0)
     ops = {k: np.asarray(v) for k, v in ops.items()}
     return {"dag/chain": _chain_nodes(job, ops),
-            "dag/diamond": _diamond_nodes(job, ops)}
+            "dag/diamond": _diamond_nodes(job, ops),
+            "dag/serial": _serial_nodes(job, ops)}
 
 
 def _real_rows() -> Tuple[List[Row], dict]:

@@ -67,14 +67,16 @@ SUITES = {
                "preemption, bit-exact preempt/resume",
     "dag": "dependent job graphs: chain latency vs critical path, 0-byte "
            "intermediate d2h, diamond overlap",
+    "perflint": "perf linter: autofix regret vs model-optimal, corpus "
+                "gate, lint wallclock overhead",
 }
 
 #: suites the CI bench-smoke gate runs (`make bench-smoke` / ci.yml)
 CI_SUITES = ("fig07", "fig12", "staging", "session", "scheduler", "faults",
-             "preempt", "dag")
+             "preempt", "dag", "perflint")
 
 #: row-name fragments excluded from --check (compile-dominated, unbounded noise)
-CHECK_SKIP = ("/cold", "/error", "unix_time", "/verify/")
+CHECK_SKIP = ("/cold", "/error", "unix_time", "/verify/", "/lint/")
 
 
 def _direction(unit: str) -> str:
@@ -211,6 +213,7 @@ def main() -> None:
         offload_wallclock, serve_throughput, staging_wall, stream_wallclock,
     )
     from benchmarks.paper_figs import ALL_FIGS
+    from benchmarks.perflint_bench import perflint_suite
     from benchmarks.preempt_bench import preempt_suite
     from benchmarks.scheduler_bench import scheduler_suite
     from benchmarks.session_bench import session_suite
@@ -228,6 +231,7 @@ def main() -> None:
     suites["faults"] = faults_suite
     suites["preempt"] = preempt_suite
     suites["dag"] = dag_suite
+    suites["perflint"] = perflint_suite
     missing = sorted(set(suites) ^ set(SUITES))
     assert not missing, f"suite registry out of sync: {missing}"
     if keep is not None:

@@ -55,9 +55,28 @@ def build_diamond():
     ]
 
 
+def build_reshard():
+    """A serial wide -> narrow -> wide chain: both edges pay a d2d
+    reshard forward on the critical path.  Deliberate — it is the perf
+    linter's worked example (section 5 of ``main``), so the file-level
+    allow below keeps its ``OFLP104`` findings out of ``make
+    lint-graphs`` while ``python -m repro.lint`` still reports them."""
+    # repro: allow(OFLP104) -- intentional reshard, demonstrated in main()
+    job = jobs.make_axpy(N)
+    ops, _ = job.make_instance(3)
+    ops = {k: np.asarray(v, dtype=np.float64) for k, v in ops.items()}
+    return [
+        GraphNode(job, ops, name="wide"),
+        GraphNode(job, {"x": ops["x"], "y": Ref("wide")}, name="narrow",
+                  clusters=[0, 1, 2, 3]),
+        GraphNode(job, {"x": ops["x"], "y": Ref("narrow")}, name="tail"),
+    ]
+
+
 def build_graphs():
     """name -> GraphNode list, for the ``make verify-graphs`` gate."""
-    return {"chain": build_chain(), "diamond": build_diamond()}
+    return {"chain": build_chain(), "diamond": build_diamond(),
+            "reshard": build_reshard()}
 
 
 def main() -> None:
@@ -88,7 +107,21 @@ def main() -> None:
     gh.wait()
     print(f"  max_inflight={gh.max_inflight} (>= 2: arms overlapped)")
 
-    print("\n=== 4. a seeded defect is rejected before any staging ===")
+    print("\n=== 4. perf lint: the reshard chain leaves cycles on "
+          "the table ===")
+    from repro.analysis import perflint
+    nodes = build_reshard()
+    findings = perflint.lint_graph(nodes, default_width=8)
+    for f in findings:
+        print(f"  {f}")
+    fixed = perflint.apply(findings, nodes=nodes).nodes
+    out_a = sess.submit_graph(nodes).wait()
+    out_b = sess.submit_graph(fixed).wait()
+    same = all(np.array_equal(np.asarray(out_a[k]), np.asarray(out_b[k]))
+               for k in out_a)
+    print(f"  autofixed graph bit-identical: {same}")
+
+    print("\n=== 5. a seeded defect is rejected before any staging ===")
     job = jobs.make_axpy(N)
     ops, _ = job.make_instance(2)
     bad = [GraphNode(job, {"x": ops["x"], "y": Ref("b")}, name="a"),

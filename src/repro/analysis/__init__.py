@@ -10,11 +10,17 @@
 * :mod:`~repro.analysis.sanitizer` — ``REPRO_SANITIZE=1`` vector-clock
   happens-before instrumentation of the live runtime protocol
   (dependency-free leaf).
+* :mod:`~repro.analysis.perflint` — the performance twin of the
+  verifier: :func:`lint` / :func:`lint_graph` / :func:`lint_session`
+  run the §6 cost models over a submission and emit ``OFLP1##``
+  findings (severity ``PERF``) with machine-applicable fixes
+  (:func:`perflint.apply`); surfaced by ``Session.submit(lint=True)``
+  and the ``python -m repro.lint`` CLI.
 
-The leaves import eagerly; :mod:`~repro.analysis.verifier` pulls in the
-core modules, so its names resolve lazily (PEP 562) — core modules may
-``from repro.analysis import diagnostics, sanitizer`` at module level
-without a cycle.
+The leaves import eagerly; :mod:`~repro.analysis.verifier` and
+:mod:`~repro.analysis.perflint` pull in the core modules, so their
+names resolve lazily (PEP 562) — core modules may ``from repro.analysis
+import diagnostics, sanitizer`` at module level without a cycle.
 """
 
 from __future__ import annotations
@@ -23,20 +29,25 @@ from typing import Any
 
 from . import diagnostics, sanitizer
 from .diagnostics import (
-    CODES, Diagnostic, Severity, contradiction, explain, invalid_field,
-    invalid_mode, use_after_donate,
+    CODES, Diagnostic, DiagnosticsLog, Severity, UnknownDiagnosticCode,
+    contradiction, explain, invalid_field, invalid_mode, use_after_donate,
 )
 from .sanitizer import Sanitizer, SanitizerError
 
 __all__ = [
-    "CODES", "Diagnostic", "Sanitizer", "SanitizerError", "Severity",
+    "CODES", "Diagnostic", "DiagnosticsLog", "Fix", "PerfFinding",
+    "Sanitizer", "SanitizerError", "Severity", "UnknownDiagnosticCode",
     "VerificationError", "contradiction", "diagnostics", "explain",
-    "invalid_field", "invalid_mode", "sanitizer", "use_after_donate",
-    "verifier", "verify", "verify_graph", "verify_policy",
+    "invalid_field", "invalid_mode", "lint", "lint_graph", "lint_session",
+    "perflint", "sanitizer", "use_after_donate", "verifier", "verify",
+    "verify_graph", "verify_policy",
 ]
 
 _VERIFIER_NAMES = ("VerificationError", "verify", "verify_graph",
                    "verify_policy", "raise_errors")
+
+_PERFLINT_NAMES = ("Applied", "Fix", "PerfFinding", "lint", "lint_graph",
+                   "lint_session", "suggested_policy")
 
 
 def __getattr__(name: str) -> Any:
@@ -44,6 +55,12 @@ def __getattr__(name: str) -> Any:
         import importlib
         mod = importlib.import_module(".verifier", __name__)
         if name == "verifier":
+            return mod
+        return getattr(mod, name)
+    if name == "perflint" or name in _PERFLINT_NAMES:
+        import importlib
+        mod = importlib.import_module(".perflint", __name__)
+        if name == "perflint":
             return mod
         return getattr(mod, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

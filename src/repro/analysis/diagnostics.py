@@ -15,25 +15,36 @@ branches, so it must sit below every core module in the import graph.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import difflib
 import enum
 import json
-from typing import Any, Dict, Mapping, Optional, Tuple, Type
+from typing import (
+    Any, Deque, Dict, Iterable, Iterator, List, Mapping, Optional, Tuple,
+    Type,
+)
 
 __all__ = [
-    "CODES", "Diagnostic", "Severity", "contradiction", "explain",
-    "invalid_field", "invalid_mode", "use_after_donate",
+    "CODES", "Diagnostic", "DiagnosticsLog", "Severity",
+    "UnknownDiagnosticCode", "contradiction", "explain", "invalid_field",
+    "invalid_mode", "use_after_donate",
 ]
 
 
 class Severity(str, enum.Enum):
     """How a diagnostic gates a submit: ``ERROR`` raises before any
     staging, ``WARNING`` is advisory (the runtime handles the hazard —
-    e.g. by renaming — but the descriptor could be cheaper without it).
+    e.g. by renaming — but the descriptor could be cheaper without it),
+    and ``PERF`` never gates — the descriptor is *correct* but the §6
+    cost model predicts a cheaper configuration (``OFLP1##`` codes from
+    :mod:`repro.analysis.perflint`, each carrying a predicted cycle
+    delta and a machine-applicable fix).
     """
 
     ERROR = "error"
     WARNING = "warning"
+    PERF = "perf"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +135,67 @@ CODES: Dict[str, _CodeInfo] = {
         "released, revoked, or superseded by a resize.  Request a new "
         "lease from the scheduler (or use the current lease object) "
         "before submitting."),
+    # -- OFLP1##: performance findings (repro.analysis.perflint) ---------
+    "OFLP101": _CodeInfo(
+        "suboptimal staging mode", Severity.PERF,
+        "The pinned policy.staging moves the replicated operand "
+        "footprint over a slower leg than the §6 staging model's best "
+        "mode for this byte count and cluster selection (host fan-out "
+        "vs. the quadrant fan-out tree).  The finding carries the "
+        "predicted cycle delta; apply the suggested staging= pin or "
+        "leave the field open so the planner decides.  Note the cycle "
+        "model favors the tree from ~4 clusters at any size; on a "
+        "cache-dominated host substrate the wallclock crossover sits "
+        "near Planner.tree_min_bytes (see the staging_wall bench)."),
+    "OFLP102": _CodeInfo(
+        "missed fusion opportunity", Severity.PERF,
+        "A batched submit pins policy.fuse below the model-optimal "
+        "factor: the dispatch-constant phases (A-D, H, I) are paid per "
+        "launch and amortize with B, and for this job the host-side "
+        "constant dominates the device phases, so a larger fuse "
+        "strictly reduces predicted per-job cycles.  Apply the "
+        "suggested fuse= or leave it open for the planner."),
+    "OFLP103": _CodeInfo(
+        "in-flight window below model-optimal", Severity.PERF,
+        "policy.window pins the pipeline depth to 1 (or below the "
+        "planner's pick) where the amortization model shows an open "
+        "window overlapping the next launch's host-side constant with "
+        "the current launch's device phases: t_job drops from "
+        "t_const/B + t_E + t_F + t_G to max(t_const/B + t_E, t_F + "
+        "t_G).  Apply the suggested window= or leave it open."),
+    "OFLP104": _CodeInfo(
+        "reshard/forward on the critical path", Severity.PERF,
+        "A dataflow edge crosses cluster selections, so the consumer "
+        "pays a device-to-device forward (DMA setup + transfer + "
+        "cross-quadrant hops) on the graph's critical path; aligning "
+        "the consumer's selection with its producer forwards by "
+        "aliasing at zero modeled cost and lowers the predicted "
+        "makespan.  The fix rewrites the consumer node's clusters=."),
+    "OFLP105": _CodeInfo(
+        "selection breaks single-request multicast", Severity.PERF,
+        "The cluster selection is not one aligned power-of-two subcube, "
+        "so the one-write wakeup (paper §5) decomposes into multiple "
+        "multicast requests — each extra request replays the "
+        "dispatch-constant phases.  An aligned window of the same (or "
+        "nearest) width dispatches in a single request; the fix "
+        "rewrites clusters= to the cheapest single-request window by "
+        "predicted total cycles."),
+    "OFLP106": _CodeInfo(
+        "resident operand never reused", Severity.PERF,
+        "Session.stage() paid the staging leg to pin operands resident, "
+        "but no later submit redispatched them "
+        "(residency=Residency.RESIDENT): the staging cycles and the "
+        "device memory are pure waste.  Drop the stage() call, or "
+        "redispatch against the warm buffers."),
+    "OFLP107": _CodeInfo(
+        "donation disabled on a dead buffer", Severity.PERF,
+        "A fused batch launch stages fresh host operands whose stacked "
+        "device buffers die at launch, and an operand matches the "
+        "output shape — with donate_operands=False XLA must allocate "
+        "and fill a fresh output buffer per launch instead of aliasing "
+        "the dead operand in place.  Pin donate_operands=True (safe: "
+        "fresh-staged buffers have no other readers) to save one "
+        "buffer copy per launch and halve peak device memory."),
 }
 
 
@@ -199,13 +271,96 @@ class Diagnostic:
         return err
 
 
+class UnknownDiagnosticCode(KeyError):
+    """``explain()`` was asked about a code the table does not know.
+
+    Subclasses :class:`KeyError` (the historical behavior) but carries
+    the offending ``.code`` and a nearest-known-code ``.suggestion``
+    so CLIs and error surfaces can answer "did you mean OFLP101?"
+    instead of a bare traceback.
+    """
+
+    def __init__(self, code: str):
+        self.code = code
+        matches = difflib.get_close_matches(
+            str(code).upper(), sorted(CODES), n=1, cutoff=0.4)
+        self.suggestion: Optional[str] = matches[0] if matches else None
+        hint = f" — did you mean {self.suggestion!r}?" if self.suggestion \
+            else ""
+        super().__init__(f"unknown diagnostic code {code!r}{hint} "
+                         f"(known: {sorted(CODES)})")
+
+    def __str__(self) -> str:
+        # KeyError.__str__ repr()s its single arg; keep the message flat.
+        return str(self.args[0])
+
+
 def explain(code: str) -> str:
-    """Long-form explanation of a diagnostic code (``OFL001``...)."""
+    """Long-form explanation of a diagnostic code (``OFL001``...).
+
+    Raises :class:`UnknownDiagnosticCode` (a :class:`KeyError`) with a
+    nearest-code suggestion when the code is not in the table.
+    """
     info = CODES.get(code)
     if info is None:
-        raise KeyError(f"unknown diagnostic code {code!r} "
-                       f"(known: {sorted(CODES)})")
+        raise UnknownDiagnosticCode(code)
     return f"{code} [{info.severity.value}] {info.title}: {info.explain}"
+
+
+class DiagnosticsLog:
+    """Bounded in-memory diagnostics table for long-lived sessions.
+
+    The verifier and the perf linter report findings on *every* submit;
+    a serve loop that runs for days would grow an append-only list
+    without bound.  This is the fix: a ring buffer of the most recent
+    ``limit`` diagnostics plus counters that never lose information —
+    ``total`` counts every record ever made and ``dropped`` how many
+    fell off the front (``total - len(log)``).
+
+    ``limit <= 0`` disables retention entirely (counters still tick).
+    """
+
+    def __init__(self, limit: int = 256):
+        self.limit = int(limit)
+        self._buf: Deque[Diagnostic] = collections.deque(
+            maxlen=max(0, self.limit))
+        self.total = 0
+
+    @property
+    def dropped(self) -> int:
+        """Diagnostics that fell off the front of the ring."""
+        return self.total - len(self._buf)
+
+    def record(self, diags: Iterable[Diagnostic]) -> None:
+        for d in diags:
+            self.total += 1
+            if self.limit > 0:
+                self._buf.append(d)
+
+    def snapshot(self) -> List[Diagnostic]:
+        """The retained diagnostics, oldest first (a copy)."""
+        return list(self._buf)
+
+    def counts(self) -> Dict[str, int]:
+        """Retained diagnostics histogrammed by code."""
+        out: Dict[str, int] = {}
+        for d in self._buf:
+            out[d.code] = out.get(d.code, 0) + 1
+        return out
+
+    def clear(self) -> None:
+        self._buf.clear()
+        self.total = 0
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self) -> Iterator[Diagnostic]:
+        return iter(self._buf)
+
+    def __repr__(self) -> str:
+        return (f"DiagnosticsLog(limit={self.limit}, retained={len(self)}, "
+                f"total={self.total}, dropped={self.dropped})")
 
 
 # -- shim constructors (the core modules raise through these) ----------------

@@ -22,7 +22,12 @@ surface (:func:`verify` / :func:`verify_graph` / :func:`verify_policy`
 reporting typed :class:`Diagnostic`\\ s with stable ``OFL###`` codes,
 the :class:`VerificationError` submit gate, and the
 ``REPRO_SANITIZE=1`` hazard sanitizer; README "Static verification &
-sanitizer").
+sanitizer"), and the model-driven perf linter (``Session(lint=True)``
+/ :func:`repro.analysis.perflint.lint_graph` emitting ``OFLP1##``
+:class:`PerfFinding`\\ s with machine-applicable autofix, the
+:class:`DiagnosticsLog` ring buffer behind ``Session(diag_limit=)``,
+and the ``python -m repro.lint`` CLI with SARIF/JSON export and
+baselines; README "Performance linting").
 
 Quickstart::
 
@@ -46,10 +51,16 @@ API" section has the migration table.
 
 from repro.analysis import (
     Diagnostic,
+    DiagnosticsLog,
+    Fix,
+    PerfFinding,
     SanitizerError,
     Severity,
+    UnknownDiagnosticCode,
     VerificationError,
     explain,
+    lint,
+    lint_graph,
     verify,
     verify_graph,
     verify_policy,
@@ -123,6 +134,7 @@ __all__ = [
     "Completion",
     "CompletionTimeout",
     "Diagnostic",
+    "DiagnosticsLog",
     "DonatedOperandError",
     "Estimate",
     "Explain",
@@ -133,6 +145,7 @@ __all__ = [
     "FaultKind",
     "FaultPlan",
     "FaultSpec",
+    "Fix",
     "GraphError",
     "GraphHandle",
     "GraphNode",
@@ -148,6 +161,7 @@ __all__ = [
     "PAPER_JOBS",
     "PaperJob",
     "PendingLease",
+    "PerfFinding",
     "PlanDecision",
     "PlanStats",
     "Planner",
@@ -169,12 +183,15 @@ __all__ = [
     "StepWatchdog",
     "Tenant",
     "TenantKind",
+    "UnknownDiagnosticCode",
     "VerificationError",
     "WatchdogConfig",
     "deadline_cycles",
     "elastic_restore",
     "estimate",
     "explain",
+    "lint",
+    "lint_graph",
     "make_instances",
     "predict_recovery",
     "predict_staging",

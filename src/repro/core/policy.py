@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import warnings
-from typing import Optional, Type, TypeVar, Union
+from typing import Any, Dict, Optional, Tuple, Type, TypeVar, Union
 
 
 class Staging(str, enum.Enum):
@@ -247,6 +247,20 @@ class OffloadPolicy:
     def pinned(self, **fields) -> "OffloadPolicy":
         """A copy with ``fields`` replaced (typed ``dataclasses.replace``)."""
         return dataclasses.replace(self, **fields)
+
+    def diff(self, other: "OffloadPolicy") -> Dict[str, Tuple[Any, Any]]:
+        """Field-by-field delta to ``other``: ``{field: (mine, theirs)}``.
+
+        The perf linter renders its ``suggested_policy`` through this
+        (only the changed knobs, not the full record), and it is handy
+        for explaining what a planner decision actually pinned.
+        """
+        out: Dict[str, Tuple[Any, Any]] = {}
+        for f in dataclasses.fields(self):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if a != b:
+                out[f.name] = (a, b)
+        return out
 
 
 #: The model-driven policy: the planner picks staging mode, fusion factor

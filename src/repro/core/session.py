@@ -51,6 +51,7 @@ from typing import Any, Deque, Dict, List, Mapping, Optional, Sequence, Tuple, U
 
 import numpy as np
 
+from repro.analysis.diagnostics import DiagnosticsLog
 from repro.core import model as amodel
 from repro.core import multicast as mc
 from repro.core import simulator
@@ -417,6 +418,7 @@ class Explain:
     stats: PlanStats            # measured counters of the plans involved
     jobs: int
     wall_s: Optional[float] = None   # end-to-end, once waited
+    findings: List[Any] = dataclasses.field(default_factory=list)
 
     def table(self) -> str:
         lines = [self.estimate.table(), f"measured ({self.jobs} jobs):"]
@@ -426,6 +428,10 @@ class Explain:
             lines.append(f"  wall_s: {self.wall_s:.6f} "
                          f"({self.wall_s / max(self.jobs, 1) * 1e6:.1f} "
                          "us/job)")
+        if self.findings:
+            lines.append(f"perf findings ({len(self.findings)}):")
+            for pf in self.findings:
+                lines.append(f"  {pf}")
         return "\n".join(lines)
 
     __str__ = table
@@ -442,7 +448,8 @@ class SessionHandle:
 
     def __init__(self, session: "Session", job: PaperJob,
                  est: Estimate, parts: List[Tuple[str, Any]],
-                 multi: bool, plans: List[Any], submitted_at: float):
+                 multi: bool, plans: List[Any], submitted_at: float,
+                 findings: Sequence[Any] = ()):
         self.session = session
         self.job = job
         self._estimate = est
@@ -453,6 +460,8 @@ class SessionHandle:
         self._wall: Optional[float] = None
         self._result: Any = None
         self._done = False
+        #: advisory OFLP1## perf findings (submit ran with lint=True)
+        self.findings: List[Any] = list(findings)
 
     @property
     def jobs(self) -> int:
@@ -491,7 +500,7 @@ class SessionHandle:
             if plan is not None:
                 agg.accumulate(plan.stats)
         return Explain(estimate=self._estimate, stats=agg, jobs=self.jobs,
-                       wall_s=self._wall)
+                       wall_s=self._wall, findings=list(self.findings))
 
 
 class ReliableHandle:
@@ -586,6 +595,8 @@ class GraphHandle:
             nd.name if nd.name is not None else i
             for i, nd in enumerate(self.nodes)]
         self._results: Optional[Dict[Union[int, str], Any]] = None
+        #: advisory OFLP1## perf findings (graph submitted with lint=True)
+        self.findings: List[Any] = []
 
     @property
     def issue_order(self) -> List[int]:
@@ -663,7 +674,9 @@ class Session:
                  planner: Optional[Planner] = None,
                  runtime: Optional[OffloadRuntime] = None,
                  faults: Optional[FaultInjector] = None,
-                 verify: bool = True):
+                 verify: bool = True,
+                 lint: bool = False,
+                 diag_limit: int = 256):
         if runtime is not None and devices is not None:
             raise ValueError("give devices or a runtime, not both")
         if lease is not None and (devices is not None or runtime is not None):
@@ -674,6 +687,7 @@ class Session:
         self.policy = policy
         self.n_units = n_units
         self.verify = bool(verify)
+        self.lint = bool(lint)
         self.params = params
         self.planner = planner or Planner(params)
         self._faults = faults
@@ -714,10 +728,26 @@ class Session:
         # estimates are deterministic per (job, selection, batch, policy):
         # cache them so warm submits pay no model arithmetic
         self._est_cache: Dict[Tuple, Estimate] = {}
+        # perf-lint findings are deterministic over the same key
+        self._lint_cache: Dict[Tuple, List[Any]] = {}
+        # verify warnings + lint findings land here, ring-buffered so a
+        # long-lived serve loop holds memory flat (diag_limit caps it)
+        self._diags = DiagnosticsLog(diag_limit)
+        # stage() residency ledger for the OFLP106 pass: (job, selection)
+        # -> staging cycles paid and how many resident submits reused it
+        self._staged_residency: Dict[Tuple, Dict[str, Any]] = {}
 
     @property
     def devices(self) -> List[Any]:
         return list(self._devices)
+
+    @property
+    def diagnostics(self) -> "DiagnosticsLog":
+        """The session's bounded diagnostics table: the most recent
+        ``diag_limit`` verify warnings and perf-lint findings
+        (:class:`~repro.analysis.diagnostics.DiagnosticsLog`), with
+        ``total``/``dropped`` counters that never lose count."""
+        return self._diags
 
     @property
     def lease(self) -> ClusterLease:
@@ -837,7 +867,8 @@ class Session:
                n: Optional[int] = None,
                request: Optional[mc.MulticastRequest] = None,
                clusters: Optional[Sequence[int]] = None,
-               after: Sequence[Any] = ()) -> SessionHandle:
+               after: Sequence[Any] = (),
+               lint: Optional[bool] = None) -> SessionHandle:
         """Dispatch ``job`` under a typed policy — the one submit path.
 
         ``after`` adds ordering edges on in-flight handles
@@ -864,6 +895,12 @@ class Session:
         Returns a :class:`SessionHandle`; ``wait()`` yields the result
         (dict submit) or per-job results in submit order (list submit),
         ``explain()`` the predicted-vs-measured breakdown.
+
+        ``lint=True`` (or ``Session(lint=True)``) additionally runs the
+        performance linter (:mod:`repro.analysis.perflint`) over the
+        submit: advisory ``OFLP1##`` findings — never a gate — land in
+        :attr:`Session.diagnostics`, on ``handle.findings``, and in
+        ``handle.explain()``.
         """
         self._check_open("submit")
         pol = self.policy if policy is None else policy
@@ -910,6 +947,10 @@ class Session:
                  else (pol.fuse or 1) if resident else 1)
         first_ops = (operands[0] if multi
                      else None if resident else operands)
+        if resident:
+            entry = self._staged_residency.get((job.spec.name, tuple(ids)))
+            if entry is not None:
+                entry["uses"] += 1
         cache_key = (job.spec.name, tuple(ids), batch, pol)
         est = self._est_cache.get(cache_key)
         if est is None:
@@ -917,6 +958,9 @@ class Session:
                            n_units=self.n_units, params=self.params,
                            operands=first_ops, planner=self.planner)
             self._est_cache[cache_key] = est
+        findings = self._lint_submit(
+            job, first_ops, pol, batch, ids,
+            self.lint if lint is None else lint, cache_key)
         self._slo_gate(est, batch)
         decision = est.decision
         rt = self._runtime_for(pol)
@@ -978,7 +1022,27 @@ class Session:
                 plans.append(stream.plan)
 
         return SessionHandle(self, job, est, parts, multi or
-                             (resident and decision.fuse > 1), plans, t0)
+                             (resident and decision.fuse > 1), plans, t0,
+                             findings=findings)
+
+    def _lint_submit(self, job: PaperJob, first_ops: Any,
+                     pol: OffloadPolicy, batch: int, ids: Sequence[int],
+                     lint: bool, cache_key: Tuple) -> List[Any]:
+        """Run (and cache) the perf linter for one submit; findings are
+        recorded in the session diagnostics log the first time only."""
+        if not lint:
+            return []
+        findings = self._lint_cache.get(cache_key)
+        if findings is None:
+            from repro.analysis import perflint
+            findings = perflint.lint(
+                job, first_ops, policy=pol, batch=batch,
+                clusters=list(ids), allowed=self._cluster_ids,
+                n_units=self.n_units, params=self.params,
+                planner=self.planner)
+            self._lint_cache[cache_key] = findings
+            self._diags.record(f.diagnostic for f in findings)
+        return findings
 
     def _verify_submit(self, job: PaperJob, operands: Any, n, request,
                        clusters) -> None:
@@ -997,6 +1061,9 @@ class Session:
         diags = _verifier.verify(job, lease=self._lease, operands=operands,
                                  n=None if request is not None else n,
                                  clusters=clusters, n_units=self.n_units)
+        # every diagnostic — warnings included — lands in the session's
+        # ring-buffered log (they used to be computed then discarded)
+        self._diags.record(diags)
         errors = [d for d in diags if d.severity is Severity.ERROR]
         if not errors:
             return
@@ -1025,7 +1092,8 @@ class Session:
     # -- dependent job graphs -----------------------------------------------
 
     def submit_graph(self, nodes: Sequence[GraphNode], *,
-                     policy: Optional[OffloadPolicy] = None) -> GraphHandle:
+                     policy: Optional[OffloadPolicy] = None,
+                     lint: Optional[bool] = None) -> GraphHandle:
         """Dispatch a DAG of dependent jobs like an out-of-order core.
 
         ``nodes`` are :class:`~repro.core.scoreboard.GraphNode`\\ s whose
@@ -1064,9 +1132,20 @@ class Session:
                     f"{type(nd).__name__}")
         if self.verify:
             from repro.analysis import verifier as _verifier
-            _verifier.raise_errors(_verifier.verify_graph(
+            diags = _verifier.verify_graph(
                 nodes, policy=pol, n_units=self.n_units,
-                default_width=len(self._devices), session=self))
+                default_width=len(self._devices), session=self)
+            self._diags.record(diags)
+            _verifier.raise_errors(diags)
+        findings: List[Any] = []
+        if self.lint if lint is None else lint:
+            from repro.analysis import perflint
+            findings = perflint.lint_graph(
+                nodes, policy=pol, n_units=self.n_units,
+                default_width=len(self._devices),
+                allowed=self._cluster_ids, params=self.params,
+                planner=self.planner)
+            self._diags.record(f.diagnostic for f in findings)
         deps, data_edges = resolve_graph(nodes)
         sb = Scoreboard(deps)
         targets: List["Session"] = []
@@ -1146,6 +1225,7 @@ class Session:
                  if (nd.fetch if nd.fetch is not None else i in sinks)]
         gh = GraphHandle(nodes, sb, handles, fetch, forwarded,
                          sum(w.stalls for w in windows.values()))
+        gh.findings = findings
         for t in {id(t): t for t in [self] + targets}.values():
             t._graphs.append(gh)
         return gh
@@ -1388,6 +1468,9 @@ class Session:
         self._streams = {}
         self._fused_inflight = collections.deque()
         self._est_cache = {}
+        self._lint_cache = {}
+        # the failover window invalidates the ledger's selections
+        self._staged_residency = {}
 
     def _restage(self, snapshots: List[Tuple]) -> int:
         """Replay resident snapshots onto the current window through the
@@ -1553,6 +1636,21 @@ class Session:
                        fuse=batch if multi else None)
         plan.stage(stacked, _caller_owned=not multi,
                    via=decision.staging)
+        # OFLP106 ledger: remember what this stage cost; resident submits
+        # of the same (job, selection) bump the use counter, and
+        # perflint.lint_session flags entries nothing ever redispatched
+        rep = self.planner.replicated_bytes(job, first_ops) * batch
+        total = sum(int(np.asarray(v).nbytes)
+                    for v in first_ops.values()) * batch
+        cycles = (self.planner.staging_cost(rep, ids, decision.staging)
+                  if rep > 0 else 0.0)
+        if total > rep:   # sharded operands ride the host link once
+            cycles += (self.params.dma_setup_one
+                       + (total - rep) / self.params.wide_bw_bytes_per_cycle
+                       + self.params.dma_latency)
+        self._staged_residency[(job.spec.name, tuple(ids))] = {
+            "cycles": cycles, "uses": 0, "batch": batch,
+        }
         return decision
 
     @staticmethod

@@ -510,6 +510,26 @@ def forward_model(nbytes: float, src_ids: Union[int, Iterable[int]],
     return t
 
 
+def selection_requests(cluster_ids: Union[int, Iterable[int]],
+                       num_clusters: Optional[int] = None) -> int:
+    """Multicast requests the one-write wakeup needs for a selection.
+
+    The paper's single-request dispatch (§5) holds only when the cluster
+    selection is one aligned power-of-two subcube of the mesh; any other
+    selection greedily decomposes into several subcube requests
+    (:func:`repro.core.multicast.encode_cluster_selection_multi`), each
+    replaying the dispatch-constant phases.  The perf linter's OFLP105
+    pass and the ``perflint`` bench both key off this count, so it lives
+    here in the measurement domain.
+    """
+    from repro.core import multicast as mc
+    ids = _resolve_selection(cluster_ids)
+    if not ids:
+        raise ValueError("empty cluster selection")
+    return len(mc.encode_cluster_selection_multi(
+        ids, num_clusters if num_clusters is not None else mc.NUM_CLUSTERS))
+
+
 def model_error(predicted: float, measured: float) -> float:
     """Relative model error |predicted - measured| / measured (fig.-12
     metric; the paper's bar is < 0.15 everywhere)."""

@@ -59,6 +59,13 @@ CODE_SNAPSHOT = {
     "OFL009": ("invalid policy field", "error"),
     "OFL010": ("policy contradiction", "error"),
     "OFL011": ("inactive lease", "error"),
+    "OFLP101": ("suboptimal staging mode", "perf"),
+    "OFLP102": ("missed fusion opportunity", "perf"),
+    "OFLP103": ("in-flight window below model-optimal", "perf"),
+    "OFLP104": ("reshard/forward on the critical path", "perf"),
+    "OFLP105": ("selection breaks single-request multicast", "perf"),
+    "OFLP106": ("resident operand never reused", "perf"),
+    "OFLP107": ("donation disabled on a dead buffer", "perf"),
 }
 
 
@@ -84,11 +91,24 @@ def test_every_code_json_round_trips():
 
 
 def test_explain_and_unknown_code():
+    from repro.analysis.diagnostics import UnknownDiagnosticCode
+
     for code in CODES:
         text = explain(code)
         assert code in text and CODES[code].title in text
+    # the typed error is still a KeyError (the legacy contract), but
+    # carries the offending code and a nearest-code suggestion
     with pytest.raises(KeyError):
         explain("OFL999")
+    with pytest.raises(UnknownDiagnosticCode) as ei:
+        explain("OFLP110")
+    assert ei.value.code == "OFLP110"
+    assert ei.value.suggestion in CODES
+    assert ei.value.suggestion.startswith("OFLP")
+    assert "did you mean" in str(ei.value)
+    with pytest.raises(UnknownDiagnosticCode) as ei:
+        explain("ofl001")   # close but not a code: suggests the real one
+    assert ei.value.suggestion == "OFL001"
     with pytest.raises(ValueError):
         Diagnostic("OFL999", "nope")
 

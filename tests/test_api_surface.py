@@ -33,23 +33,27 @@ def _params(fn):
 
 EXPORTS = (
     "AUTO", "BackupOffload", "ClusterLease", "Completion",
-    "CompletionTimeout", "Diagnostic", "DonatedOperandError", "Estimate",
+    "CompletionTimeout", "Diagnostic", "DiagnosticsLog",
+    "DonatedOperandError", "Estimate",
     "Explain", "FabricHealth",
     "FabricScheduler", "FaultError", "FaultInjector", "FaultKind",
-    "FaultPlan", "FaultSpec", "GraphError", "GraphHandle", "GraphNode",
+    "FaultPlan", "FaultSpec", "Fix", "GraphError", "GraphHandle",
+    "GraphNode",
     "InfoDist", "JobHandle", "LeaseError",
     "LeaseUnavailable", "MulticastRequest", "OffloadConfig", "OffloadPolicy",
     "OffloadRuntime", "Overloaded", "PAPER_JOBS", "PaperJob", "PendingLease",
-    "PlanDecision", "PlanStats",
+    "PerfFinding", "PlanDecision", "PlanStats",
     "Planner", "Ref", "ReliableHandle", "Residency", "RetryPolicy",
     "SanitizerError",
     "SchedulerPolicy", "Scoreboard", "ServeConfig", "ServeEngine",
     "ServeTenant",
     "Session", "SessionHandle", "SessionHealth", "Severity", "Staging",
     "StepWatchdog",
-    "Tenant", "TenantKind", "VerificationError", "WatchdogConfig",
+    "Tenant", "TenantKind", "UnknownDiagnosticCode", "VerificationError",
+    "WatchdogConfig",
     "deadline_cycles",
-    "elastic_restore", "estimate", "explain", "make_instances",
+    "elastic_restore", "estimate", "explain", "lint", "lint_graph",
+    "make_instances",
     "predict_recovery",
     "predict_staging", "verify", "verify_graph", "verify_policy",
 )
@@ -59,7 +63,7 @@ ENUMS = {
     "Residency": ("FRESH", "RESIDENT"),
     "InfoDist": ("MULTICAST", "P2P_CHAIN"),
     "Completion": ("UNIT", "CENTRAL_COUNTER"),
-    "Severity": ("ERROR", "WARNING"),
+    "Severity": ("ERROR", "WARNING", "PERF"),
     "TenantKind": ("OFFLOAD", "SERVE"),
     "FaultKind": ("CLUSTER_DEATH", "STRAGGLE", "HOST_LINK_STALL",
                   "LOST_ARRIVAL"),
@@ -78,10 +82,11 @@ SNAPSHOT = {
     "Planner.decide": ("job", "clusters", "batch", "policy", "n_units",
                        "operands="),
     "Session": ("devices=", "lease=", "policy=", "n_units=", "params=",
-                "planner=", "runtime=", "faults=", "verify="),
+                "planner=", "runtime=", "faults=", "verify=", "lint=",
+                "diag_limit="),
     "Session.submit": ("job", "operands", "policy=", "job_args=", "n=",
-                       "request=", "clusters=", "after="),
-    "Session.submit_graph": ("nodes", "policy="),
+                       "request=", "clusters=", "after=", "lint="),
+    "Session.submit_graph": ("nodes", "policy=", "lint="),
     "GraphNode": ("job", "operands", "name=", "job_args=", "after=", "n=",
                   "request=", "clusters=", "fetch=", "session="),
     "Ref": ("node",),

@@ -1,0 +1,497 @@
+"""The model-driven performance linter (ISSUE-10).
+
+Coverage layers:
+
+* **per-code fixtures** — every ``OFLP1##`` code has a static fixture
+  that triggers it, and every fixture also passes the *correctness*
+  verifier clean (a perf finding on an invalid submission would be
+  advice about a graph that can never run).
+* **autofix** — ``perflint.apply`` patches policies / nodes /
+  selections; property test that autofixing a random defect-free DAG
+  keeps it verify-clean; a subprocess executes autofixed graphs
+  bit-identically to the originals on a real mesh.
+* **session integration** — ``submit(lint=True)`` findings on the
+  handle and in ``explain()``, the ``DiagnosticsLog`` ring buffer
+  behind ``Session(diag_limit=)`` (memory-flat under a 10k-record
+  loop and through the real submit path), ``lint_session``'s dead-
+  residency pass.
+* **CLI** — ``python -m repro.lint`` over a tmp corpus: exit codes,
+  JSON/SARIF shape, ``--update-baseline`` round trip, ``# repro:
+  allow(...)`` suppressions, ``--codes-md`` and the README drift gate.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import lint as lint_cli
+from repro.analysis import CODES, Severity, perflint, verify, verify_graph
+from repro.analysis.diagnostics import DiagnosticsLog
+from repro.core import jobs, simulator
+from repro.core.policy import AUTO, Staging
+from repro.core.scoreboard import GraphNode, Ref
+
+REPO = Path(__file__).resolve().parent.parent
+
+_JOB = jobs.make_axpy(2048)
+_OPS = {k: np.asarray(v) for k, v in _JOB.make_instance(0)[0].items()}
+
+
+def codes_of(findings):
+    return sorted({f.code for f in findings})
+
+
+def _serial_reshard():
+    return [
+        GraphNode(_JOB, _OPS, name="wide"),
+        GraphNode(_JOB, {"x": _OPS["x"], "y": Ref("wide")}, name="narrow",
+                  clusters=[0, 1, 2, 3]),
+        GraphNode(_JOB, {"x": _OPS["x"], "y": Ref("narrow")}, name="tail"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# per-code fixtures (each also verifier-clean)
+# ---------------------------------------------------------------------------
+
+
+def test_oflp101_suboptimal_staging():
+    job = jobs.make_atax(64, 4096)
+    ops, _ = job.make_instance(0)
+    pol = AUTO.pinned(staging=Staging.HOST_FANOUT)
+    assert verify(job, policy=pol, operands=ops, n=8) == []
+    fs = perflint.lint(job, ops, policy=pol, clusters=list(range(8)))
+    assert "OFLP101" in codes_of(fs)
+    f = next(f for f in fs if f.code == "OFLP101")
+    assert f.delta > 0
+    assert f.fix.target == "policy" and f.fix.field == "staging"
+    fixed = perflint.suggested_policy(fs, pol)
+    assert fixed.staging in (Staging.TREE, Staging.TREE_RESHARD)
+    assert pol.diff(fixed) == {"staging": (pol.staging, fixed.staging)}
+
+
+def test_oflp102_missed_fusion():
+    pol = AUTO.pinned(fuse=1)
+    assert verify(_JOB, policy=pol, operands=_OPS, n=8) == []
+    fs = perflint.lint(jobs.make_axpy(256), policy=pol, batch=16, n=8)
+    assert "OFLP102" in codes_of(fs)
+    f = next(f for f in fs if f.code == "OFLP102")
+    assert f.fix.field == "fuse" and f.fix.value > 1
+    # unpinned fuse: the planner already decides, nothing to report
+    fs = perflint.lint(jobs.make_axpy(256), policy=AUTO.pinned(
+        donate_operands=True), batch=16, n=8)
+    assert "OFLP102" not in codes_of(fs)
+
+
+def test_oflp103_window_below_optimal():
+    pol = AUTO.pinned(window=1)
+    assert verify(_JOB, policy=pol, operands=_OPS, n=8) == []
+    fs = perflint.lint(jobs.make_axpy(256), policy=pol, batch=16, n=8)
+    # the same fixture legitimately also trips OFLP107 (donation off on
+    # a fused batch) — assert membership, not the exact set
+    assert "OFLP103" in codes_of(fs)
+    f = next(f for f in fs if f.code == "OFLP103")
+    assert f.fix.field == "window" and f.fix.value > 1
+
+
+def test_oflp104_reshard_on_critical_path():
+    nodes = _serial_reshard()
+    assert verify_graph(nodes, default_width=8) == []
+    fs = perflint.lint_graph(nodes, default_width=8)
+    assert codes_of(fs) == ["OFLP104"]
+    for f in fs:
+        assert f.fix.target == "node"
+        assert f.delta > 0
+    # applying to a fixpoint converges to a lint-clean graph
+    cur = nodes
+    for _ in range(8):
+        fs = perflint.lint_graph(cur, default_width=8)
+        if not fs:
+            break
+        cur = perflint.apply(fs, nodes=cur).nodes
+    assert perflint.lint_graph(cur, default_width=8) == []
+    assert verify_graph(cur, default_width=8) == []
+    # and the fix is a real cycle win in the discrete-event domain
+    before, _ = perflint.graph_jobs(nodes, default_width=8)
+    after, _ = perflint.graph_jobs(cur, default_width=8)
+    assert (simulator.simulate_graph(after).makespan
+            < simulator.simulate_graph(before).makespan)
+
+
+def test_oflp105_misaligned_selection():
+    mis = list(range(1, 9))
+    assert verify(_JOB, operands=_OPS, clusters=mis) == []
+    assert simulator.selection_requests(mis) > 1
+    fs = perflint.lint(_JOB, _OPS, clusters=mis)
+    assert "OFLP105" in codes_of(fs)
+    fixed = perflint.apply(fs, clusters=mis).clusters
+    assert simulator.selection_requests(fixed) == 1
+    assert len(fixed) >= 2
+    # an aligned pow2 window is already single-request: quiet
+    assert "OFLP105" not in codes_of(
+        perflint.lint(_JOB, _OPS, clusters=list(range(8))))
+
+
+def test_oflp107_donation_off_on_dead_buffer():
+    fs = perflint.lint(jobs.make_axpy(256), batch=16, n=8)
+    assert "OFLP107" in codes_of(fs)
+    f = next(f for f in fs if f.code == "OFLP107")
+    assert f.fix.field == "donate_operands" and f.fix.value is True
+    # donation already on, or an unfused dispatch: quiet
+    fs = perflint.lint(jobs.make_axpy(256),
+                       policy=AUTO.pinned(donate_operands=True),
+                       batch=16, n=8)
+    assert "OFLP107" not in codes_of(fs)
+    fs = perflint.lint(jobs.make_axpy(256), batch=1, n=8)
+    assert "OFLP107" not in codes_of(fs)
+
+
+def test_clean_auto_submit_has_no_findings():
+    assert perflint.lint(_JOB, _OPS, n=8) == []
+    # and a clean graph stays clean
+    nodes = [GraphNode(_JOB, _OPS, name="a"),
+             GraphNode(_JOB, {"x": _OPS["x"], "y": Ref("a")}, name="b")]
+    assert perflint.lint_graph(nodes, default_width=8) == []
+
+
+def test_invalid_submission_returns_no_perf_findings():
+    # perf advice about a submission the verifier rejects is noise
+    bad = [GraphNode(_JOB, {"x": _OPS["x"], "y": Ref("zz")}, name="a")]
+    assert verify_graph(bad, default_width=8) != []
+    assert perflint.lint_graph(bad, default_width=8) == []
+
+
+# ---------------------------------------------------------------------------
+# findings + apply mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_finding_payload_round_trip_and_stable_key():
+    fs = perflint.lint_graph(_serial_reshard(), default_width=8)
+    f = fs[0]
+    restored = perflint.PerfFinding.from_payload(f.to_payload())
+    assert restored == f
+    # keys are stable across model recalibration: no cycle counts
+    assert f.key().startswith("OFLP104:")
+    assert not re.search(r"\d{3,}", f.key().split(":", 1)[1])
+
+
+def test_apply_routes_fixes_and_reports_skips():
+    nodes = _serial_reshard()
+    fs = perflint.lint_graph(nodes, default_width=8)
+    applied = perflint.apply(fs, nodes=nodes)
+    assert applied.applied and not applied.skipped
+    assert applied.nodes is not nodes
+    assert nodes[1].clusters == [0, 1, 2, 3]      # input untouched
+    # a fix with no matching artifact lands in skipped, loudly
+    applied = perflint.apply(fs, policy=AUTO)
+    assert not applied.applied and len(applied.skipped) == len(fs)
+
+
+def test_significance_threshold_suppresses_noise():
+    # a single-cluster dispatch has nothing to restage or realign
+    assert perflint.lint(_JOB, _OPS, clusters=[0]) == []
+    # the gate itself: sub-2% "wins" are inside the model's error bar
+    assert not perflint._significant(1000.0, 985.0)
+    assert not perflint._significant(10.0, 9.5)   # abs floor of 1 cycle
+    assert perflint._significant(1000.0, 900.0)
+    assert perflint.MIN_DELTA_FRAC == 0.02
+
+
+# ---------------------------------------------------------------------------
+# property: autofix preserves verifier-cleanliness on random DAGs
+# ---------------------------------------------------------------------------
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+
+def _random_dag(rng, n_nodes):
+    widths = ([0, 1, 2, 3], [4, 5, 6, 7], [2, 3, 4, 5], None)
+    nodes = []
+    for i in range(n_nodes):
+        ops = {"x": _OPS["x"], "y": _OPS["y"]}
+        if i and rng.random() < 0.7:
+            ops["y"] = Ref(int(rng.integers(0, i)))
+        nodes.append(GraphNode(_JOB, ops, name=f"n{i}",
+                               clusters=widths[int(rng.integers(0, 4))]))
+    return nodes
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_autofixed_random_dags_stay_verify_clean(seed, n_nodes):
+    rng = np.random.default_rng(seed)
+    nodes = _random_dag(rng, n_nodes)
+    if [d for d in verify_graph(nodes, default_width=8)
+            if d.severity is Severity.ERROR]:
+        return                                    # not a valid fixture
+    fs = perflint.lint_graph(nodes, default_width=8)
+    fixed = perflint.apply(fs, nodes=nodes).nodes
+    assert [d for d in verify_graph(fixed, default_width=8)
+            if d.severity is Severity.ERROR] == []
+
+
+# ---------------------------------------------------------------------------
+# DiagnosticsLog ring buffer
+# ---------------------------------------------------------------------------
+
+
+def test_diaglog_10k_records_memory_flat():
+    from repro.analysis import Diagnostic
+
+    log = DiagnosticsLog(limit=256)
+    d = Diagnostic("OFLP103", "synthetic", severity=Severity.PERF)
+    for _ in range(10_000):
+        log.record([d])
+    assert len(log) == 256                        # ring bound holds
+    assert log.total == 10_000
+    assert log.dropped == 9_744
+    assert log.counts() == {"OFLP103": 256}
+    log.clear()
+    assert len(log) == 0 and log.total == 0 and log.dropped == 0
+    # limit=0: count-only mode, nothing retained
+    log0 = DiagnosticsLog(limit=0)
+    log0.record([d, d])
+    assert len(log0) == 0 and log0.total == 2 and log0.dropped == 2
+
+
+def test_session_diag_limit_through_submit_path(subproc):
+    out = subproc("""
+        from repro.api import AUTO, Session
+        from repro.core import jobs
+
+        job = jobs.make_axpy(2048)
+        ops, _ = job.make_instance(0)
+        sess = Session(diag_limit=16)
+        # distinct pinned policies -> distinct lint cache keys -> a
+        # recording per submit; a batch-1 fuse pin is clamped to 1 so
+        # execution is identical while window=1 keeps OFLP103 firing
+        for f in range(1, 41):
+            pol = AUTO.pinned(window=1, fuse=f)
+            sess.submit(job, ops, policy=pol, lint=True).wait()
+        total = sess.diagnostics.total
+        assert len(sess.diagnostics) == 16, len(sess.diagnostics)
+        assert total > 16
+        assert sess.diagnostics.dropped == total - 16
+        before = total
+        sess.submit(job, ops, policy=AUTO.pinned(window=1, fuse=1),
+                    lint=True).wait()
+        assert sess.diagnostics.total == before   # cache hit: flat
+        print("ring ok", total)
+        """)
+    assert "ring ok" in out
+
+
+# ---------------------------------------------------------------------------
+# session integration (real mesh)
+# ---------------------------------------------------------------------------
+
+
+def test_submit_lint_findings_and_explain(subproc):
+    out = subproc("""
+        from repro.api import AUTO, Session
+        from repro.core import jobs
+
+        job = jobs.make_axpy(256)
+        inst, _ = jobs.make_instances(job, 16)
+        sess = Session()
+        h = sess.submit(job, inst, policy=AUTO.pinned(window=1), lint=True)
+        h.wait()
+        codes = sorted({f.code for f in h.findings})
+        assert "OFLP103" in codes, codes
+        table = h.explain().table()
+        assert "perf findings" in table
+        assert "OFLP103" in table
+        # lint off (the default): no findings recorded on the handle
+        h2 = sess.submit(job, inst, policy=AUTO.pinned(window=1))
+        h2.wait()
+        assert h2.findings == []
+        print("explain ok", codes)
+        """)
+    assert "explain ok" in out
+
+
+def test_lint_session_dead_residency(subproc):
+    out = subproc("""
+        from repro.analysis import perflint
+        from repro.api import Residency, Session
+        from repro.core import jobs
+
+        job = jobs.make_axpy(2048)
+        ops, _ = job.make_instance(0)
+        sess = Session()
+        sess.stage(job, ops, n=8)
+        fs = perflint.lint_session(sess)
+        assert [f.code for f in fs] == ["OFLP106"], fs
+        assert fs[0].fix.target == "stage"
+        sess.submit(job, Residency.RESIDENT, n=8).wait()
+        assert perflint.lint_session(sess) == []   # redispatched: alive
+        print("residency ok")
+        """)
+    assert "residency ok" in out
+
+
+def test_autofixed_graphs_execute_bit_identical(subproc):
+    out = subproc("""
+        import numpy as np
+        from repro.analysis import perflint
+        from repro.api import GraphNode, Ref, Session
+        from repro.core import jobs
+
+        job = jobs.make_axpy(2048)
+        base_ops, _ = job.make_instance(0)
+        base_ops = {k: np.asarray(v) for k, v in base_ops.items()}
+        widths = ([0, 1, 2, 3], [4, 5, 6, 7], [2, 3, 4, 5], None)
+        sess = Session()
+        checked = 0
+        for seed in range(5):
+            rng = np.random.default_rng(seed)
+            nodes = []
+            for i in range(int(rng.integers(2, 6))):
+                ops = dict(base_ops)
+                if i and rng.random() < 0.7:
+                    ops["y"] = Ref(int(rng.integers(0, i)))
+                nodes.append(GraphNode(job, ops, name=f"n{i}",
+                                       clusters=widths[int(
+                                           rng.integers(0, 4))]))
+            fs = perflint.lint_graph(nodes,
+                                     default_width=len(sess.devices))
+            fixed = perflint.apply(fs, nodes=nodes).nodes
+            out_a = sess.submit_graph(nodes).wait()
+            out_b = sess.submit_graph(fixed).wait()
+            for k in out_a:
+                a, b = np.asarray(out_a[k]), np.asarray(out_b[k])
+                assert a.tobytes() == b.tobytes(), (seed, k)
+            checked += len(fs)
+        assert checked > 0, "no finding ever fired; fixture too tame"
+        print("bit-identical ok", checked)
+        """)
+    assert "bit-identical ok" in out
+
+
+# ---------------------------------------------------------------------------
+# the CLI
+# ---------------------------------------------------------------------------
+
+_TMP_GRAPH = '''
+import numpy as np
+from repro.core import jobs
+from repro.core.scoreboard import GraphNode, Ref
+
+{allow}
+def build():
+    job = jobs.make_axpy(2048)
+    ops, _ = job.make_instance(0)
+    ops = {{k: np.asarray(v) for k, v in ops.items()}}
+    return {{"serial": [
+        GraphNode(job, ops, name="wide"),
+        GraphNode(job, {{"x": ops["x"], "y": Ref("wide")}}, name="narrow",
+                  clusters=[0, 1, 2, 3]),
+        GraphNode(job, {{"x": ops["x"], "y": Ref("narrow")}}, name="tail"),
+    ]}}
+'''
+
+
+def _write_corpus(tmp_path, allow=""):
+    g = tmp_path / "g.py"
+    g.write_text(_TMP_GRAPH.format(allow=allow))
+    return g
+
+
+def test_cli_gate_baseline_round_trip(tmp_path, capsys, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    _write_corpus(tmp_path)
+    argv = ["--graphs", "g.py:build", "--baseline", "bl.json"]
+    assert lint_cli.main(argv) == 1               # new findings fail
+    assert "[NEW] OFLP104" in capsys.readouterr().out
+    assert lint_cli.main(argv + ["--update-baseline"]) == 0
+    bl = json.loads((tmp_path / "bl.json").read_text())
+    assert sum(bl["findings"].values()) == 2
+    assert lint_cli.main(argv) == 0               # baselined now
+    assert "[baseline] OFLP104" in capsys.readouterr().out
+
+
+def test_cli_allow_comment_suppresses(tmp_path, capsys, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    _write_corpus(tmp_path, allow="# repro: allow(OFLP104, OFLP105)\n")
+    assert lint_cli.main(["--graphs", "g.py:build",
+                          "--baseline", "bl.json"]) == 0
+    out = capsys.readouterr().out
+    assert "[allowed] OFLP104" in out
+    assert "2 allowed" in out
+
+
+def test_cli_json_and_sarif_shape(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    _write_corpus(tmp_path)
+    lint_cli.main(["--graphs", "g.py:build", "--baseline", "bl.json",
+                   "--json", "out.json", "--sarif", "out.sarif"])
+    capsys.readouterr()
+    j = json.loads((tmp_path / "out.json").read_text())
+    assert j["schema"] == 1
+    (findings,) = [f for g, f in j["graphs"].items() if g == "g:serial"]
+    assert {f["diagnostic"]["code"] for f in findings} == {"OFLP104"}
+    s = json.loads((tmp_path / "out.sarif").read_text())
+    assert s["version"] == "2.1.0"
+    run = s["runs"][0]
+    assert {r["id"] for r in run["tool"]["driver"]["rules"]} == set(CODES)
+    assert all(r["level"] == "note" for r in run["results"])
+    assert all(r["ruleId"] == "OFLP104" for r in run["results"])
+    assert run["results"][0]["properties"]["fix"]["field"] == "clusters"
+
+
+def test_cli_missing_corpus_skips(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    assert lint_cli.main(["--graphs", "nope.py:build",
+                          "--baseline", "bl.json"]) == 0
+    assert "0 graphs" in capsys.readouterr().out
+
+
+def test_checked_in_corpus_is_gate_clean(capsys, monkeypatch):
+    monkeypatch.chdir(REPO)
+    assert lint_cli.main([]) == 0
+    out = capsys.readouterr().out
+    assert "0 new" in out
+    # both accepted-debt mechanisms are exercised by the real corpus
+    assert "[allowed] OFLP104" in out
+    assert "[baseline] OFLP104" in out
+
+
+# ---------------------------------------------------------------------------
+# generated docs + tooling wiring
+# ---------------------------------------------------------------------------
+
+
+def test_codes_markdown_matches_registry(capsys):
+    assert lint_cli.main(["--codes-md"]) == 0
+    out = capsys.readouterr().out
+    for code, info in CODES.items():
+        assert f"`{code}`" in out
+        assert info.title in out
+
+
+def test_readme_code_table_not_drifted():
+    readme = (REPO / "README.md").read_text()
+    m = re.search(r"<!-- diagnostic-codes:begin -->\n(.*?)\n"
+                  r"<!-- diagnostic-codes:end -->", readme, re.S)
+    assert m, "README lost its generated diagnostic-codes block"
+    assert m.group(1).strip() == lint_cli.codes_markdown().strip(), (
+        "README diagnostic table drifted from the registry; regenerate "
+        "with `python -m repro.lint --codes-md`")
+
+
+def test_bench_registry_lists_perflint():
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--list"],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    assert out.returncode == 0, out.stderr
+    row = [ln for ln in out.stdout.splitlines()
+           if ln.startswith("perflint")]
+    assert row and "bench-smoke" in row[0], out.stdout
